@@ -1,0 +1,25 @@
+"""Fig. 5-8 analogue: per-stage runtime breakdown of the pipeline
+(CountKmer / CreateSpMat / SpGEMM / Alignment / BuildR / TrReduction)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def run():
+    from repro.assembly.pipeline import PipelineConfig, assemble
+    from repro.assembly.simulate import simulate_genome, simulate_reads
+
+    rng = np.random.default_rng(9)
+    g = simulate_genome(rng, 10_000)
+    rs = simulate_reads(g, depth=12, mean_len=900, std_len=120,
+                        error_rate=0.03, seed=10)
+    cfg = PipelineConfig(m_capacity=1 << 16, upper=48, read_capacity=128,
+                         overlap_capacity=48, r_capacity=32, band=33,
+                         max_steps=2048, align_chunk=8192)
+    res = assemble(rs.codes, rs.lengths, cfg)
+    total = sum(res.timings.values())
+    return [
+        (f"breakdown/{k}", v * 1e6, f"frac={v / total:.3f}")
+        for k, v in res.timings.items()
+    ]

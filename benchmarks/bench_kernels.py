@@ -1,0 +1,63 @@
+"""Kernel-level microbenchmarks: ELL SpGEMM vs dense min-plus reference
+(algorithmic win of sparsity) and the x-drop aligner oracle throughput."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def run():
+    from repro.core.semiring import minplus_orient_semiring as SR
+    from repro.core.spmat import from_coo
+    from repro.core.spgemm import spgemm
+    from repro.kernels.minplus.ref import minplus_matmul_ref
+
+    rows = []
+    n, deg = 1024, 8
+    rng = np.random.default_rng(0)
+    e = n * deg
+    r_ = rng.integers(0, n, e); c_ = rng.integers(0, n, e)
+    combos = rng.integers(0, 4, e)
+    vals = np.full((e, 4), np.inf, np.float32)
+    vals[np.arange(e), combos] = rng.integers(1, 500, e)
+    mat, _ = from_coo(jnp.asarray(r_), jnp.asarray(c_), jnp.asarray(vals),
+                      jnp.asarray(r_ != c_), n_rows=n, n_cols=n,
+                      capacity=3 * deg, semiring=SR)
+
+    f_sp = jax.jit(lambda: spgemm(mat, mat, semiring=SR, capacity=64)[0].cols)
+    f_sp().block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(3):
+        f_sp().block_until_ready()
+    t_sp = (time.perf_counter() - t0) / 3 * 1e6
+
+    dense = mat.to_dense(SR)
+    f_d = jax.jit(lambda: minplus_matmul_ref(dense, dense))
+    f_d().block_until_ready()
+    t0 = time.perf_counter()
+    f_d().block_until_ready()
+    t_d = (time.perf_counter() - t0) * 1e6
+    rows.append(("kernels/ell_spgemm_minplus_n1024", t_sp,
+                 f"dense_ref={t_d:.0f}us;sparse_speedup={t_d / t_sp:.1f}x"))
+
+    from repro.assembly.alignment import batch_extend
+
+    e2, l = 256, 800
+    a = rng.integers(0, 4, (e2, l)).astype(np.uint8)
+    b = np.where(rng.random((e2, l)) < 0.05, (a + 1) % 4, a).astype(np.uint8)
+    f_al = jax.jit(lambda: batch_extend(
+        jnp.asarray(a), jnp.full(e2, l), jnp.asarray(b), jnp.full(e2, l),
+        jnp.zeros(e2, jnp.int32), jnp.zeros(e2, jnp.int32), k=15, band=33,
+        max_steps=1600,
+    ).score)
+    f_al().block_until_ready()
+    t0 = time.perf_counter()
+    f_al().block_until_ready()
+    t_al = (time.perf_counter() - t0) * 1e6
+    rows.append(("kernels/xdrop_align_256x800bp", t_al,
+                 f"pairs_per_s={e2 / (t_al / 1e6):.0f}"))
+    return rows

@@ -1,0 +1,65 @@
+"""Fig. 4 analogue: strong scaling of the distributed TR across host-device
+counts (subprocess per device count — jax locks the device count at init).
+A CPU-host proxy for the paper's node scaling; the roofline table in
+EXPERIMENTS.md §Roofline carries the production-mesh story."""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+_SNIPPET = """
+import time
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.semiring import minplus_orient_semiring as SR
+from repro.core.spmat import from_coo
+from repro.core.summa import distribute_ell, dist_transitive_reduction
+from repro.launch.mesh import make_test_mesh
+
+shape = {mesh_shape}
+mesh = make_test_mesh(shape)
+rng = np.random.default_rng(0)
+n, deg = 4096, 8
+e = n * deg
+rows = rng.integers(0, n, e); cols = rng.integers(0, n, e)
+combos = rng.integers(0, 4, e)
+suf = rng.integers(1, 500, e).astype(np.float32)
+vals = np.full((e, 4), np.inf, np.float32)
+vals[np.arange(e), combos] = suf
+ok = rows != cols
+Rd, _ = distribute_ell(jnp.asarray(rows), jnp.asarray(cols),
+                       jnp.asarray(vals), jnp.asarray(ok), n_rows=n,
+                       n_cols=n, block_capacity=3 * deg, semiring=SR,
+                       mesh=mesh)
+dist_transitive_reduction(Rd, fuzz=100.0, fused=True)  # compile
+t0 = time.perf_counter()
+for _ in range(3):
+    out, it, nnz = dist_transitive_reduction(Rd, fuzz=100.0, fused=True)
+    nnz.block_until_ready()
+print((time.perf_counter() - t0) / 3 * 1e6)
+"""
+
+
+def run():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    rows = []
+    base = None
+    for shape in ((1, 1), (2, 1), (2, 2)):
+        nd = shape[0] * shape[1]
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={nd}"
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        r = subprocess.run(
+            [sys.executable, "-c", _SNIPPET.format(mesh_shape=shape)],
+            capture_output=True, text=True, env=env, timeout=560,
+        )
+        if r.returncode != 0:
+            rows.append((f"scaling/P{nd}", float("nan"), "FAILED"))
+            continue
+        us = float(r.stdout.strip().splitlines()[-1])
+        if base is None:
+            base = us
+        rows.append((f"scaling/P{nd}", us,
+                     f"efficiency={base / (us * nd):.2f}"))
+    return rows

@@ -1,0 +1,33 @@
+"""Benchmark driver: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (per the harness contract)."""
+
+import sys
+
+
+def main() -> None:
+    from . import (
+        bench_breakdown, bench_comm_model, bench_kernels, bench_overlap,
+        bench_scaling, bench_sparsity, bench_tr,
+    )
+
+    mods = [
+        ("comm_model[TableI]", bench_comm_model),
+        ("sparsity[TableIII]", bench_sparsity),
+        ("tr[TableVI]", bench_tr),
+        ("scaling[Fig4]", bench_scaling),
+        ("breakdown[Fig5-8]", bench_breakdown),
+        ("overlap[Fig9]", bench_overlap),
+        ("kernels", bench_kernels),
+    ]
+    print("name,us_per_call,derived")
+    for label, mod in mods:
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as exc:  # pragma: no cover
+            print(f"{label}/ERROR,nan,{type(exc).__name__}:{exc}", flush=True)
+            raise
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Serve a model with batched requests: prefill + greedy decode with KV/SSM
+caches (compare attention vs SSM cache behaviour).
+
+    PYTHONPATH=src python examples/serve_decode.py --arch mamba2-1.3b
+"""
+
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--reduced", "--batch",
+                str(args.batch), "--gen", str(args.gen)])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,365 @@
+"""Generate EXPERIMENTS.md from the dry-run JSON cache + hillclimb tags.
+
+Usage: python scripts/gen_experiments.py > EXPERIMENTS.md
+"""
+
+import glob
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+DRY = os.path.join(ROOT, "experiments", "dryrun")
+
+
+def load(tag=""):
+    out = {}
+    for f in sorted(glob.glob(os.path.join(DRY, "*.json"))):
+        base = os.path.basename(f)[:-5]
+        parts = base.split("__")
+        if len(parts) != 3:
+            continue
+        arch, shape, mesh_tag = parts
+        if tag:
+            if not mesh_tag.endswith("_" + tag):
+                continue
+            mesh = mesh_tag[: -len("_" + tag)]
+        else:
+            if "_" in mesh_tag:
+                continue
+            mesh = mesh_tag
+        out[(arch, shape, mesh)] = json.load(open(f))
+    return out
+
+
+def fmt_cell(d):
+    r = d["roofline"]
+    return (f"{r['compute_s']:.2e} | {r['memory_s']:.2e} | "
+            f"{r['collective_s']:.2e} | **{r['bottleneck']}** | "
+            f"{r['useful_ratio']:.2f} | {d.get('roofline_fraction', 0):.3f}")
+
+
+def main():
+    base = load()
+    print(HEADER)
+
+    # ---------------- §Dry-run ----------------
+    print(DRYRUN_INTRO)
+    print("| arch | shape | mesh | chips | arg GB/dev | temp GB/dev | "
+          "fits 16GB | collective GB/dev | compile s |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for (arch, shape, mesh), d in sorted(base.items()):
+        if d.get("skipped"):
+            print(f"| {arch} | {shape} | {mesh} | — | — | — | "
+                  f"SKIP (see DESIGN.md §4) | — | — |")
+            continue
+        if arch == "dibella":
+            stages = d["stages"]
+            am = sum(s["memory"]["argument"] for s in stages.values()) / 1e9
+            tm = max(s["memory"]["temp"] for s in stages.values()) / 1e9
+            cb = sum(s["collective_bytes_per_device"]
+                     for s in stages.values()) / 1e9
+            print(f"| {arch} | overlap+TR | {mesh} | {d['chips']} | "
+                  f"{am:.1f} | {tm:.1f} | {am + tm < 16:} | {cb:.2f} | "
+                  f"{d['compile_seconds']:.0f} |")
+            continue
+        m = d["memory"]
+        print(f"| {arch} | {shape} | {mesh} | {d['chips']} | "
+              f"{m['argument_bytes_per_device'] / 1e9:.1f} | "
+              f"{m['temp_bytes_per_device'] / 1e9:.1f} | "
+              f"{m['fits_16GB']} | {d['collective_bytes'] / 1e9:.2f} | "
+              f"{d['compile_seconds']:.0f} |")
+
+    # ---------------- §Roofline ----------------
+    print(ROOFLINE_INTRO)
+    for mesh in ("single", "multi"):
+        chips = 256 if mesh == "single" else 512
+        print(f"\n#### {'Single-pod 16×16' if mesh == 'single' else 'Multi-pod 2×16×16'} ({chips} chips)\n")
+        print("| arch | shape | compute_s | memory_s | collective_s | "
+              "bottleneck | useful | frac |")
+        print("|---|---|---|---|---|---|---|---|")
+        for (arch, shape, m), d in sorted(base.items()):
+            if m != mesh:
+                continue
+            if d.get("skipped"):
+                print(f"| {arch} | {shape} | — | — | — | SKIP | — | — |")
+                continue
+            print(f"| {arch} | {shape if arch != 'dibella' else 'overlap+TR'}"
+                  f" | {fmt_cell(d)} |")
+    print(ROOFLINE_NOTES)
+
+    # ---------------- §Perf ----------------
+    print(PERF_INTRO)
+    print(perf_tables())
+    print(PERF_NARRATIVE)
+    print(FOOTER)
+
+
+def perf_tables():
+    """Before/after pairs from tagged runs."""
+    lines = []
+    pairs = [
+        ("dibella", "train_4k", "single",
+         [("faithful", "it-0: paper-faithful full N=R² (baseline)"),
+          ("", "it-1: fused sampled-square TR (beyond-paper, default)"),
+          ("u4", "it-2: + k-mer frequency cap u=8→4 (paper's own setting)")]),
+        ("yi-9b", "train_4k", "single",
+         [("mp", "it-1 attempt: mixed precision (raw parser — REFUTED)"),
+          ("bgrad", "it-2 attempt: grad barrier + rope vjp (raw — REFUTED)"),
+          ("", "it-3: artifact root-caused → TPU-estimate collective term")]),
+        ("granite-moe-1b-a400m", "train_4k", "single",
+         [("", "baseline (shard_map EP dispatch)"),
+          ("gspmd", "ablation: GSPMD one-hot dispatch (10× WORSE)"),
+          ("bgrad", "bf16 grad barrier (REFUTED on CPU)")]),
+        ("mamba2-1.3b", "train_4k", "single",
+         [("", "it-0: baseline"),
+          ("ssdbf16", "it-1: ssd_bf16 alone (REFUTED: peak is elsewhere)"),
+          ("ssdopt", "it-2: + batch-over-model (40→19.4 GB)"),
+          ("ssdopt2", "it-3: + ssd_chunk 64")]),
+        ("gemma3-4b", "long_500k", "single",
+         [("", "it-0: baseline (full-length caches)"),
+          ("cacheopt", "it-1: owner-writes cache update (REFUTED)"),
+          ("unroll", "it-2: decode unroll (REFUTED — worse liveness)")]),
+        ("phi3-mini-3.8b", "decode_32k", "single",
+         [("", "baseline (scan ys cache copies)"),
+          ("unroll", "decode unroll (REFUTED)")]),
+    ]
+    for arch, shape, mesh, variants in pairs:
+        lines.append(f"\n#### {arch} / {shape} ({mesh}-pod)\n")
+        lines.append("| variant | compute_s | memory_s | collective_s | "
+                     "bottleneck | frac | temp GB/dev |")
+        lines.append("|---|---|---|---|---|---|---|")
+        for tag, desc in variants:
+            d = (load(tag) if tag else load()).get((arch, shape, mesh))
+            if d is None or d.get("skipped"):
+                lines.append(f"| {desc} | (not run) | | | | | |")
+                continue
+            r = d["roofline"]
+            if arch == "dibella":
+                tm = max(s["memory"]["temp"]
+                         for s in d["stages"].values()) / 1e9
+            else:
+                tm = d["memory"]["temp_bytes_per_device"] / 1e9
+            lines.append(
+                f"| {desc} | {r['compute_s']:.2e} | {r['memory_s']:.2e} | "
+                f"{r['collective_s']:.2e} | {r['bottleneck']} | "
+                f"{d.get('roofline_fraction', 0):.3f} | {tm:.1f} |")
+    return "\n".join(lines)
+
+
+HEADER = """# EXPERIMENTS — diBELLA-2D-JAX
+
+All numbers in this file are reproducible:
+  * dry-run/roofline: `PYTHONPATH=src python -m repro.launch.dryrun --all`
+    (cached JSONs in `experiments/dryrun/`; this file is generated from them
+    by `scripts/gen_experiments.py`),
+  * paper-claim validations: `PYTHONPATH=src python -m benchmarks.run`
+    (`bench_output.txt`),
+  * correctness: `PYTHONPATH=src pytest tests/` (`test_output.txt`).
+
+## §Validation against the paper's own claims
+
+| paper claim | our check | result |
+|---|---|---|
+| Alg. 2 ≡ string graph (Myers) | property tests vs sequential Myers oracle, random + genome graphs | **exact equality** (tests/test_transitive_reduction.py) |
+| TR converges in a small constant number of iterations (§V-D) | pipeline + property tests | 2–3 iterations on all inputs |
+| c ≈ 2d for a perfect overlapper (§V-C) | simulated datasets | c/2d = 1.01–1.28 (bench_sparsity) |
+| 2D beats 1D comm at P ∈ [10², 10⁴] (Table I) | cost model w/ Table III/IV constants | 2D wins at every P ≤ 16384 for both genomes (bench_comm_model) |
+| TR ≫ competing distributed TR (Table VI) | semiring TR vs dense-square TR (same input) | 54–600× vs dense square; sequential Myers wins at n ≤ 16k on 1 CPU core (expected: the paper's win is *distributed*; see §Scaling note) |
+| overlap: 2D vs 1D (Fig 9) | SpGEMM vs outer-product emulation | 2D 151× faster at equal output (the 1D variant materializes all pair duplicates; the paper's 1.2–1.9× is against a tuned hash-table 1D) |
+| end-to-end assembly works | 8–30 kb genomes, 3–5% error reads | single contig covering ≥95% of the genome; contig k-mer recall > 0.9 |
+"""
+
+DRYRUN_INTRO = """
+## §Dry-run (MULTI-POD deliverable)
+
+Every (architecture × input-shape) cell lowers **and compiles** with
+`jax.jit(step).lower(...).compile()` on BOTH production meshes
+(16×16 = 256 chips and 2×16×16 = 512 chips; 512 fake host devices).
+`long_500k` is architecture-gated (DESIGN.md §4).  `dibella` lowers the
+distributed overlap SpGEMM + transitive reduction at H. sapiens scale
+(4.2M reads).  Collective GB/dev is parsed from the partitioned HLO with
+while-loop trip correction (launch/hlo_analysis.py).
+"""
+
+ROOFLINE_INTRO = """
+## §Roofline
+
+Terms per chip and step (TPU v5e class: 197 TFLOP/s bf16, 819 GB/s HBM,
+4 × 50 GB/s ICI links):
+
+    compute_s    = FLOPs / (chips × 197e12)       [analytic model — XLA
+                   cost_analysis counts while bodies once; raw HLO numbers
+                   are in the JSONs as cost_hlo_raw]
+    memory_s     = HBM bytes / (chips × 819e9)    [analytic traffic model]
+    collective_s = collective bytes / (chips × 200e9)  [HLO-parsed, loop-aware]
+
+`useful` = MODEL_FLOPS / total FLOPs (6·N·D train, 2·N_active·D decode);
+`frac` = roofline fraction = ideal-compute-time / dominant-term-time —
+**this is the §Perf score**.
+"""
+
+ROOFLINE_NOTES = """
+### Reading the table (one sentence per regime on what moves the bottleneck)
+
+* **train_4k — collective-bound everywhere.**  Megatron TP at tp=16 moves
+  ~4·S·D bytes/layer/device against 6·N·D/P useful FLOPs; the fix is fewer
+  bytes per collective (mixed-precision gathers/reductions, §Perf it-2) and
+  higher arithmetic intensity per device (larger per-device batch).
+* **prefill_32k — collective-bound, higher fractions** (more FLOPs per
+  gathered byte at 32k tokens; yi-9b reaches 0.42 at baseline).
+* **decode — memory-bound** (every token reads all params + the KV cache;
+  the term ratio matches the classic decode arithmetic-intensity argument);
+  the fix is cache layout (windowed local layers for gemma3) and batched
+  speculative decoding (out of scope).
+* **dibella — memory-bound** (semiring SpGEMM is sort/gather traffic with
+  ~0.3 useful-FLOP ratio; the paper's own finding that assembly is
+  communication/memory-limited, not compute-limited, reproduces on TPU).
+* **single→multi pod** halves per-chip terms at fixed global batch (the pod
+  axis extends DP); collective terms stay roughly constant per chip for TP
+  traffic and halve for DP traffic — visible as slightly higher multi-pod
+  fractions for the MoE/dense train cells.
+"""
+
+PERF_INTRO = """
+## §Perf — hillclimbing log
+
+Cells hillclimbed (per the brief: worst fraction / most collective-bound /
+paper-representative):
+
+1. **dibella overlap+TR** (paper-representative; memory-bound)
+2. **yi-9b train_4k** (most collective-bound: collective/compute ≈ 120×)
+3. **granite-moe-1b-a400m train_4k** (worst roofline fraction: 0.08)
+
+plus two memory-driven fixes (mamba2 train, gemma3 long-context decode)
+required for the "fits 16 GB" deployability bar.
+"""
+
+PERF_NARRATIVE = """
+### Hypothesis → change → measure → validate log
+
+**dibella-1 (paper-faithful baseline → fused sampled square).**
+*Hypothesis:* Alg. 2 reads N=R² only at R's nonzeros; the full square
+materializes an N-pattern ~r× denser than R and sorts K² candidates per
+row — the sampled square should cut the TR stage's bytes substantially.
+*Measured:* TR-stage bytes 1492 → 875 GB/dev (−41%); total memory term
+7.44 s → 6.68 s; output graphs bit-identical (property-tested).
+**Confirmed.**  This is the headline beyond-paper optimization: the paper
+pays for a CombBLAS-shaped SpGEMM because that is the primitive its
+library offers; on TPU the SDDMM-style fusion is faster and immune to
+N-capacity overflow.
+
+**dibella-2 (k-mer cap u=8→4).**  *Hypothesis:* the overlap SpGEMM's
+candidate count (and the B-panel bytes) scale linearly with the frequency
+cap u; the paper's own experiments use max frequency 4, so u=4 should
+roughly halve the overlap stage's traffic.  *Measured:* overlap bytes
+4598 → 2516 GB/dev (−45%); total memory term 6.68 → 4.14 s.  **Confirmed.**
+Net over both iterations: dominant term **7.44 → 4.14 s (1.8×)**.
+
+**yi-1 (mixed precision) — REFUTED, twice, instructively.**
+*Hypothesis:* FSDP param gathers + grad reduce-scatters move f32; bf16
+compute params should halve them.  *Measured:* collective bytes unchanged
+to the byte.  *Diagnosis 1:* XLA already hoists the per-layer
+``w.astype(bf16)`` before the FSDP all-gather, so param gathers were bf16
+all along; the grad-reduce dtype is pinned by the cast-transpose.
+*Follow-up hypothesis:* the f32 activation collectives come from the rope
+(f32 cos/sin promote every q/k/v cotangent) and from the CE cotangent
+entering the backward scan (carry-dtype unification f32-infects all 48
+layers).  *Changes:* custom-vjp rope with exact bf16 transpose; bf16 grad
+barrier before CE.  *Measured:* still unchanged to the byte.
+*Diagnosis 2 (root cause, verified by operand tracing):* the **XLA CPU
+backend converts every bf16 dot operand to f32** (`convert*` fusions feed
+the gathers), so on this container every matmul-adjacent collective is
+measured at 2× its TPU size — no program-level change can move it.
+*Action:* the HLO parser now reports `total_bytes_tpu_estimate` (f32
+collectives fed by convert fusions counted at bf16 size); the roofline
+collective term uses the TPU estimate, the raw number stays in the JSON.
+yi-9b train_4k: raw 919.7 GB/dev (collective 4.60 s, fraction 0.240) →
+TPU-estimate 622 GB/dev (collective 3.11 s, fraction **0.355**) — the
+baseline row of the table carries the corrected term; the it-1/it-2 rows
+keep the raw-parser numbers they were measured with.  The refuted chain is kept here deliberately — the
+three "no-op" measurements are what localized the artifact.
+
+**granite (worst fraction) + EP-dispatch ablation.**  *Hypothesis:* our
+shard_map expert dispatch (replicate tokens across "model", dispatch to
+local experts, psum) beats the GSPMD one-hot/scatter formulation, which
+must materialize global (E, C, D) buffers.  *Measured:* GSPMD dispatch is
+**10.4× worse** on the collective term (0.767 → 7.978 s) and 5× on temp
+memory (8.6 → 44.5 GB — does not fit).  **Confirmed** — the framework's
+default is the right one.  The remaining inefficiency is structural:
+d_model=1024 across tp=16 leaves 64 dims/shard; the cost model says a
+tp=4 re-slicing of the same 256 chips lifts the fraction 0.08 → ~0.25
+(future work: the brief fixes the mesh shape).
+
+**mamba2 train (memory).**  *it-1 hypothesis:* f32 SSD intra-chunk buffers
+dominate → bf16 them.  *Measured:* unchanged — **refuted**, the peak is
+elsewhere.  *it-2:* batch-over-model (B/dev 16→1 for the SSD scan) —
+**confirmed for memory** (40.0 → 19.4 GB) at the cost of per-layer param
+gathers in the (CPU-inflated) collective term.  *it-3:* ssd_chunk 128→64 —
+**no change** (19.4 GB), confirming the residual peak is the outer-scan
+remat carries + backward working set, not intra-chunk buffers.  Stopped
+per the <5% criterion; next steps (not implemented): host-offloaded remat
+carries or pipeline parallelism over "pod".
+
+**decode memory (gemma3 long_500k, phi3/musicgen decode_32k).**
+*it-1 hypothesis:* the seq-sharded cache update gathers the cache —
+owner-writes shard_map update should fix it.  *Measured:* unchanged —
+**refuted**; GSPMD already partitioned the update correctly.
+*it-2 hypothesis:* the layer *scan* re-materializes the cache stack as
+fresh `ys` buffers (scan outputs cannot alias inputs slice-wise); an
+unrolled decode with `.at[i].set` writes should alias in place.
+*Measured:* **refuted again — and worse** (gemma3 long: 12.3 → 18.3 GB
+temp; phi3 decode: 17.4 → 26.2): without the scan's serialization, buffer
+assignment keeps more per-layer copies live simultaneously.  *Diagnosis
+that survives:* jax/XLA currently cannot express "scan whose ys alias its
+xs"; the honest fixes are a paged/block-table cache layout (the
+vLLM-on-TPU design) or windowed caches for gemma3's 28 local layers —
+both are cache-*layout* changes, orthogonal to the paper's technique, and
+recorded as the next iteration.  The decode-unroll path stays in the tree
+(flag, argmax-identical logits) as it remains the right shape for real
+donation-aliasing decode runtimes.
+
+### Stopping criterion
+
+dibella: it-3 candidates (ring SUMMA for panel memory, value-packing the
+4-combo suffixes into cols high bits) napkin-math to <5% on the dominant
+term after it-1+it-2 — stopped.  yi: stopped after the measurement artifact
+was root-caused (further program-level iterations cannot be validated on
+this container; the TPU-estimate column is the honest score).  granite:
+structural (mesh re-slicing) — out of scope.  The remaining 37 cells carry
+baseline-only numbers in §Roofline.
+"""
+
+FOOTER = """
+## §Scaling note (paper Fig. 4 analogue)
+
+`bench_scaling` measures the distributed TR across 1/2/4 fake host devices
+on one physical CPU core — efficiency collapses by construction (the core is
+time-sliced), so wall-clock scaling is NOT claimable from this container.
+The structural scaling argument lives in the roofline table: per-chip
+compute/memory terms halve from 256→512 chips at fixed problem size while
+collective terms stay flat (SUMMA words ∝ 1/√P per Table I), matching the
+paper's >80% parallel-efficiency regime.
+
+## Reproduction commands
+
+```
+PYTHONPATH=src python -m repro.launch.dryrun --all
+PYTHONPATH=src python -m repro.launch.dryrun --arch dibella --shape train_4k \\
+    --mesh single --tr-variant faithful --tag faithful --force
+PYTHONPATH=src python -m repro.launch.dryrun --arch dibella --shape train_4k \\
+    --mesh single --dibella-u 4 --tag u4 --force
+PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k \\
+    --mesh single --mixed-precision --tag mp --force
+PYTHONPATH=src python -m repro.launch.dryrun --arch granite-moe-1b-a400m \\
+    --shape train_4k --mesh single --moe-impl gspmd --tag gspmd --force
+PYTHONPATH=src python -m repro.launch.dryrun --arch mamba2-1.3b --shape train_4k \\
+    --mesh single --ssd-bf16 --batch-over-model --tag ssdopt --force
+PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-4b --shape long_500k \\
+    --mesh single --decode-unroll --tag unroll --force
+python scripts/gen_experiments.py > EXPERIMENTS.md
+```
+"""
+
+
+if __name__ == "__main__":
+    main()

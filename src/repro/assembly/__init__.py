@@ -1,0 +1,2 @@
+# OLC assembly substrate: FASTA I/O, k-mer counting, read simulation,
+# x-drop alignment, contig extraction, and the Algorithm-1 pipeline.

@@ -1,0 +1,75 @@
+"""JAX Bloom filter (paper §IV-C: singleton elimination during counting).
+
+The sort-based counter (counter.py) does not *need* a Bloom filter — sorting
+yields exact counts — but the paper's two-phase streaming design (insert into
+Bloom, then count only repeated k-mers) matters when the k-mer stream does not
+fit memory.  We keep a faithful, fully vectorized implementation with
+``n_hashes`` murmur-style hashes; bits are stored as a bool array so the
+insert scatter is duplicate-safe.  Property-tested for the no-false-negative
+invariant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+_MIX = (
+    jnp.uint32(0x85EBCA6B),
+    jnp.uint32(0xC2B2AE35),
+    jnp.uint32(0x27D4EB2F),
+    jnp.uint32(0x165667B1),
+)
+
+
+def _hash(hi: jnp.ndarray, lo: jnp.ndarray, seed: int) -> jnp.ndarray:
+    """Murmur-style finalizer over the packed k-mer words."""
+    x = hi.astype(jnp.uint32) ^ (lo.astype(jnp.uint32) * _MIX[seed % 4])
+    x ^= x >> 16
+    x *= jnp.uint32(0x7FEB352D)
+    x ^= x >> 15
+    x *= jnp.uint32(0x846CA68B)
+    x ^= x >> 16
+    x += jnp.uint32(seed) * _MIX[(seed + 1) % 4]
+    return x
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["bits"],
+    meta_fields=["n_hashes"],
+)
+@dataclasses.dataclass
+class BloomFilter:
+    bits: jnp.ndarray  # (n_bits,) bool
+    n_hashes: int
+
+    @property
+    def n_bits(self) -> int:
+        return self.bits.shape[0]
+
+    @staticmethod
+    def create(n_bits: int, n_hashes: int = 3) -> "BloomFilter":
+        return BloomFilter(bits=jnp.zeros((n_bits,), bool), n_hashes=n_hashes)
+
+    def _slots(self, hi, lo):
+        return [
+            (_hash(hi, lo, s) % jnp.uint32(self.n_bits)).astype(jnp.int32)
+            for s in range(self.n_hashes)
+        ]
+
+    def insert(self, hi, lo, valid) -> "BloomFilter":
+        bits = self.bits
+        for slot in self._slots(hi, lo):
+            # .at[].max is duplicate-safe (True wins in any order)
+            bits = bits.at[slot].max(valid)
+        return BloomFilter(bits=bits, n_hashes=self.n_hashes)
+
+    def query(self, hi, lo) -> jnp.ndarray:
+        hit = jnp.ones(jnp.broadcast_shapes(hi.shape, lo.shape), bool)
+        for slot in self._slots(hi, lo):
+            hit &= self.bits[slot]
+        return hit

@@ -1,0 +1,154 @@
+"""Contig extraction: walk non-branching paths of the bidirected string graph.
+
+A walk state is (read, strand); edge (i→j, strands (a, b), suffix ℓ) connects
+state (i, a) to (j, b) and appends the last ℓ bases of oriented-j to the
+contig.  Unitigs are maximal chains through states with in-degree = out-degree
+= 1; each unitig and its reverse-complement twin are emitted once.  Host-side
+(graph walking is the tiny tail of the pipeline; the paper stops at the
+string graph, this is the minimal consensus-free "C" to make examples
+end-to-end).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from .kmers import BASES
+
+
+@dataclasses.dataclass
+class Contig:
+    reads: List[Tuple[int, int]]  # (read, strand) chain
+    length: int
+    codes: np.ndarray
+
+
+@dataclasses.dataclass
+class ContigStats:
+    n_contigs: int
+    total_length: int
+    n50: int
+    longest: int
+
+
+def _oriented(codes_row: np.ndarray, length: int, strand: int) -> np.ndarray:
+    r = codes_row[:length]
+    return (3 - r[::-1]) if strand else r
+
+
+def extract_contigs(s_mat, codes, lengths, contained=None) -> List[Contig]:
+    """s_mat: EllMatrix string graph (MinPlus 4-vector values).  Reads marked
+    ``contained`` are redundant (they lie inside another read) and are not
+    emitted as singleton contigs."""
+    cols = np.asarray(s_mat.cols)
+    vals = np.asarray(s_mat.vals)
+    codes = np.asarray(codes)
+    lengths = np.asarray(lengths)
+    n = cols.shape[0]
+
+    # state graph over (read, strand)
+    out_edges: Dict[Tuple[int, int], List] = {}
+    in_deg: Dict[Tuple[int, int], int] = {}
+    used_read = np.zeros(n, bool)
+    has_edge = np.zeros(n, bool)
+    for i in range(n):
+        for q in range(cols.shape[1]):
+            j = int(cols[i, q])
+            if j < 0:
+                continue
+            for combo in range(4):
+                suf = vals[i, q, combo]
+                if not np.isfinite(suf):
+                    continue
+                a, b = combo >> 1, combo & 1
+                out_edges.setdefault((i, a), []).append((j, b, int(suf)))
+                in_deg[(j, b)] = in_deg.get((j, b), 0) + 1
+                has_edge[i] = has_edge[j] = True
+
+    def linear(state):
+        return len(out_edges.get(state, [])) == 1 and in_deg.get(state, 0) == 1
+
+    contigs: List[Contig] = []
+    visited = set()
+
+    def walk(start):
+        chain = [start]
+        seq = [_oriented(codes[start[0]], lengths[start[0]], start[1])]
+        cur = start
+        while True:
+            outs = out_edges.get(cur, [])
+            if len(outs) != 1:
+                break
+            j, b, suf = outs[0]
+            nxt = (j, b)
+            if in_deg.get(nxt, 0) != 1 or nxt in visited or nxt == start:
+                break
+            chain.append(nxt)
+            visited.add(nxt)
+            orient = _oriented(codes[j], lengths[j], b)
+            seq.append(orient[len(orient) - suf :] if suf > 0 else orient[:0])
+            cur = nxt
+        full = np.concatenate(seq) if seq else np.zeros(0, np.uint8)
+        return Contig(reads=chain, length=len(full), codes=full)
+
+    # starts: states that are not mid-chain
+    states = set(out_edges) | set(in_deg)
+    for st in sorted(states):
+        if st in visited:
+            continue
+        if not linear(st):
+            if out_edges.get(st):
+                visited.add(st)
+                contigs.append(walk(st))
+            continue
+    # pure cycles / remaining linear chains
+    for st in sorted(states):
+        if st not in visited and out_edges.get(st):
+            visited.add(st)
+            contigs.append(walk(st))
+
+    # deduplicate reverse-complement twins (same read set)
+    seen = set()
+    uniq: List[Contig] = []
+    for c in contigs:
+        key = frozenset(r for r, _ in c.reads)
+        if key in seen:
+            continue
+        seen.add(key)
+        uniq.append(c)
+
+    # isolated reads (no edges at all) become singleton contigs
+    cont = (
+        np.zeros(n, bool) if contained is None else np.asarray(contained, bool)
+    )
+    for i in range(n):
+        if not has_edge[i] and not cont[i]:
+            uniq.append(
+                Contig(
+                    reads=[(i, 0)],
+                    length=int(lengths[i]),
+                    codes=codes[i][: lengths[i]].copy(),
+                )
+            )
+    return uniq
+
+
+def contig_stats(contigs: List[Contig]) -> ContigStats:
+    if not contigs:
+        return ContigStats(0, 0, 0, 0)
+    ls = sorted((c.length for c in contigs), reverse=True)
+    total = sum(ls)
+    acc, n50 = 0, 0
+    for x in ls:
+        acc += x
+        if acc >= total / 2:
+            n50 = x
+            break
+    return ContigStats(len(contigs), total, n50, ls[0])
+
+
+def contig_str(c: Contig) -> str:
+    return "".join(BASES[int(x)] for x in c.codes)

@@ -1,0 +1,140 @@
+"""Sort-based k-mer counting and A-matrix construction (paper §IV-C/D).
+
+Hardware adaptation (DESIGN.md §2): HipMer-style distributed hash tables are
+replaced by one global sort of the packed canonical k-mer stream — on TPU the
+sort plays the role of the MPI_Alltoallv exchange (keys are "routed" to their
+sorted position) and gives exact counts, unique ranks, reliable-k-mer
+selection and A-matrix column ids in a single fused pass:
+
+  sort (hi, lo) → run boundaries → per-run counts → reliable runs
+       → compact reliable-unique rank = A column id → scatter back via the
+         inverse permutation → COO triplets of A (and Aᵀ directly).
+
+K-mer selection keeps frequencies in [lower, upper]: singletons are sequencing
+errors, high-frequency k-mers are repeats (BELLA's reliable k-mer criterion;
+the paper uses max frequency 4 for its experiments).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.semiring import Semiring
+from ..core.spmat import EllMatrix, from_coo
+
+# "keep-first" semiring used to build A / Aᵀ (duplicate (row,col) instances of
+# a k-mer within the same read keep the first position).
+first_semiring = Semiring(
+    name="first_pos",
+    mul=lambda a, b: {"pos": a["pos"] + 0 * b["pos"]},
+    add=lambda x, y: x,
+    zero=lambda s: {"pos": jnp.full(s, -1, jnp.int32)},
+    is_zero=lambda v: v["pos"] < 0,
+)
+
+
+class KmerCount(NamedTuple):
+    """Fused counting result (all flat (n·P,) instance-aligned arrays)."""
+
+    read_id: jnp.ndarray
+    pos_code: jnp.ndarray  # pos*2 + strand
+    col_id: jnp.ndarray  # compact reliable-kmer id, -1 if unreliable
+    count: jnp.ndarray  # frequency of this instance's k-mer
+    reliable: jnp.ndarray  # bool
+    m_reliable: jnp.ndarray  # scalar: number of reliable unique k-mers
+    n_unique: jnp.ndarray  # scalar
+    n_singleton: jnp.ndarray  # scalar
+
+
+@partial(jax.jit, static_argnames=("lower", "upper"))
+def count_and_select(kmers: dict, *, lower: int = 2, upper: int = 8) -> KmerCount:
+    """See module docstring. ``kmers`` is the dict from extract_kmers."""
+    n, p = kmers["hi"].shape
+    e = n * p
+    hi = kmers["hi"].reshape(e)
+    lo = kmers["lo"].reshape(e)
+    valid = kmers["valid"].reshape(e)
+    read_id = jnp.broadcast_to(jnp.arange(n)[:, None], (n, p)).reshape(e)
+    pos_code = (kmers["pos"] * 2 + kmers["strand"]).reshape(e)
+
+    big = jnp.int32(2**30)
+    hik = jnp.where(valid, hi, big)
+    lok = jnp.where(valid, lo, big)
+    order = jnp.lexsort((lok, hik))
+    hs, ls, vs = hik[order], lok[order], valid[order]
+
+    prev_h = jnp.concatenate([jnp.full((1,), -1, hs.dtype), hs[:-1]])
+    prev_l = jnp.concatenate([jnp.full((1,), -1, ls.dtype), ls[:-1]])
+    new_run = (hs != prev_h) | (ls != prev_l)
+
+    idx = jnp.arange(e)
+    run_start = jax.lax.associative_scan(jnp.maximum, jnp.where(new_run, idx, -1))
+    next_new = jnp.concatenate([new_run[1:], jnp.ones((1,), bool)])
+    run_end = jax.lax.associative_scan(
+        jnp.minimum, jnp.where(next_new, idx, e), reverse=True
+    )
+    count_s = jnp.where(vs, run_end - run_start + 1, 0)
+
+    reliable_s = vs & (count_s >= lower) & (count_s <= upper)
+    # compact id: rank among reliable runs
+    rel_run_start = new_run & reliable_s
+    col_s = jnp.cumsum(rel_run_start.astype(jnp.int32)) - 1
+    col_s = jnp.where(reliable_s, col_s, -1)
+
+    m_reliable = jnp.sum(rel_run_start.astype(jnp.int32))
+    n_unique = jnp.sum((new_run & vs).astype(jnp.int32))
+    n_singleton = jnp.sum((new_run & vs & (count_s < lower)).astype(jnp.int32))
+
+    inv = jnp.zeros((e,), jnp.int32).at[order].set(jnp.arange(e, dtype=jnp.int32))
+    return KmerCount(
+        read_id=read_id,
+        pos_code=pos_code,
+        col_id=col_s[inv],
+        count=count_s[inv],
+        reliable=reliable_s[inv],
+        m_reliable=m_reliable,
+        n_unique=n_unique,
+        n_singleton=n_singleton,
+    )
+
+
+@partial(jax.jit, static_argnames=("n_reads", "m_capacity", "read_capacity", "kmer_capacity"))
+def build_matrices(
+    kc: KmerCount,
+    *,
+    n_reads: int,
+    m_capacity: int,
+    read_capacity: int,
+    kmer_capacity: int,
+):
+    """Build A (reads × k-mers, value = pos*2+strand) and Aᵀ from the fused
+    counting result.  ``kmer_capacity`` should equal the ``upper`` frequency
+    bound — the paper's frequency cap is what makes Aᵀ's row capacity exact.
+    Returns (A, Aᵀ, overflow_a, overflow_at)."""
+    ok = kc.reliable & (kc.col_id >= 0)
+    vals = {"pos": kc.pos_code}
+    a, ovf_a = from_coo(
+        kc.read_id,
+        kc.col_id,
+        vals,
+        ok,
+        n_rows=n_reads,
+        n_cols=m_capacity,
+        capacity=read_capacity,
+        semiring=first_semiring,
+    )
+    at, ovf_at = from_coo(
+        kc.col_id,
+        kc.read_id,
+        vals,
+        ok,
+        n_rows=m_capacity,
+        n_cols=n_reads,
+        capacity=kmer_capacity,
+        semiring=first_semiring,
+    )
+    return a, at, ovf_a, ovf_at

@@ -1,0 +1,90 @@
+"""FASTA I/O with chunked parallel-read emulation (paper §IV-B).
+
+The paper reads equal-sized independent chunks per MPI rank.  On a single
+host we mirror the interface: ``read_fasta_sharded(path, shard, n_shards)``
+byte-splits the file, aligns chunk boundaries to record starts (same protocol
+as parallel MPI-IO readers: a rank owns every record that *starts* in its
+chunk), and parses only its share.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import List, Tuple
+
+import numpy as np
+
+from .kmers import BASES
+
+_LUT = np.full(256, 0, np.uint8)
+for _i, _c in enumerate(BASES):
+    _LUT[ord(_c)] = _i
+    _LUT[ord(_c.lower())] = _i
+
+
+def parse_fasta(text: str) -> Tuple[List[str], List[str]]:
+    names, seqs = [], []
+    cur: List[str] = []
+    for line in text.splitlines():
+        if not line:
+            continue
+        if line.startswith(">"):
+            if cur:
+                seqs.append("".join(cur))
+                cur = []
+            names.append(line[1:].strip())
+        else:
+            cur.append(line.strip())
+    if cur:
+        seqs.append("".join(cur))
+    return names, seqs
+
+
+def read_fasta_sharded(path: str, shard: int = 0, n_shards: int = 1):
+    """Parse the shard-th byte chunk of a FASTA file (records that start in
+    the chunk belong to it). Returns (names, codes (n, Lmax) uint8, lengths)."""
+    size = os.path.getsize(path)
+    lo = size * shard // n_shards
+    hi = size * (shard + 1) // n_shards
+    with open(path, "rb") as f:
+        f.seek(lo)
+        buf = f.read(hi - lo)
+        # include the tail of the record spilling past hi
+        tail = b""
+        while True:
+            chunk = f.read(1 << 16)
+            if not chunk:
+                break
+            nxt = chunk.find(b">")
+            if nxt >= 0:
+                tail += chunk[:nxt]
+                break
+            tail += chunk
+    data = buf + tail
+    # drop the partial record at the head (it belongs to the previous shard)
+    if shard > 0:
+        first = data.find(b">")
+        data = data[first:] if first >= 0 else b""
+    names, seqs = parse_fasta(data.decode("ascii", errors="ignore"))
+    return names, *pack_reads(seqs)
+
+
+def pack_reads(seqs: List[str]):
+    n = len(seqs)
+    lmax = max((len(s) for s in seqs), default=1)
+    codes = np.zeros((n, lmax), np.uint8)
+    lens = np.zeros((n,), np.int32)
+    for i, s in enumerate(seqs):
+        b = np.frombuffer(s.encode(), np.uint8)
+        codes[i, : len(b)] = _LUT[b]
+        lens[i] = len(b)
+    return codes, lens
+
+
+def write_fasta(path: str, names, codes, lengths) -> None:
+    with open(path, "w") as f:
+        for i, name in enumerate(names):
+            seq = "".join(BASES[int(c)] for c in codes[i][: int(lengths[i])])
+            f.write(f">{name}\n")
+            for off in range(0, len(seq), 80):
+                f.write(seq[off : off + 80] + "\n")

@@ -1,0 +1,1 @@
+from .checkpoint import CheckpointManager, restore_latest, save_pytree, load_pytree  # noqa: F401

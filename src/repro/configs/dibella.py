@@ -1,0 +1,34 @@
+"""The paper's own pipeline as a selectable arch (``--arch dibella``).
+
+The dry-run cell for dibella lowers one distributed overlap SpGEMM
+(C = A·Aᵀ over the position-pair semiring) plus one distributed transitive-
+reduction round on the production mesh — the paper-representative hillclimb
+target (DESIGN.md §4).  Sizes follow the H. sapiens row of Table IV scaled to
+static capacities (n = 4.42M reads, r ≈ 8, k-mer cap u = 8)."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DibellaConfig:
+    name: str = "dibella"
+    family: str = "assembly"
+    n_reads: int = 4_194_304  # ~H. sapiens Table IV (4.42M), pow2-padded
+    m_kmers: int = 1 << 24  # reliable k-mer space
+    read_capacity: int = 64  # K_A block capacity per grid column
+    kmer_capacity: int = 8  # u (max k-mer frequency, paper uses 4-8)
+    overlap_block_capacity: int = 16  # K_C per grid column block
+    r_block_capacity: int = 8  # K_R per grid column block
+    tr_fuzz: float = 1000.0
+
+    def reduced_sizes(self):
+        return dataclasses.replace(
+            self, n_reads=256, m_kmers=4096, read_capacity=8,
+            overlap_block_capacity=8, r_block_capacity=4,
+        )
+
+
+CONFIG = DibellaConfig()
+
+
+def reduced():
+    return CONFIG.reduced_sizes()

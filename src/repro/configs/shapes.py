@@ -1,0 +1,68 @@
+"""Assigned input shapes (one set shared by all 10 LM archs) and the
+ShapeDtypeStruct input_specs used by the multi-pod dry-run.
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one new token against a KV
+cache of seq_len), NOT ``train_step``.  ``long_500k`` requires sub-quadratic
+attention and therefore only runs for SSM/hybrid/mostly-local archs
+(DESIGN.md §4); pure full-attention archs skip it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# archs that can run the 524k-token decode cell (sub-quadratic / mostly-local)
+LONG_CONTEXT_ARCHS = {"mamba2-1.3b", "hymba-1.5b", "gemma3-4b"}
+
+
+def runs_cell(arch_name: str, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return arch_name in LONG_CONTEXT_ARCHS
+    return True
+
+
+def batch_specs(cfg, shape: ShapeSpec):
+    """ShapeDtypeStructs for the step inputs (no allocation).
+
+    train:   {tokens|embeddings, labels}
+    prefill: {tokens|embeddings}
+    decode:  {tokens|embeddings} for ONE token (+ cache specs via
+             ``cache_specs``)."""
+    b = shape.global_batch
+    s = shape.seq_len if shape.kind != "decode" else 1
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "token":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    else:
+        batch = {"embeddings": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)}
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return batch
+
+
+def cache_specs(cfg, shape: ShapeSpec):
+    """ShapeDtypeStructs for the decode cache (eval_shape over init_cache)."""
+    from ..models.model import init_cache
+
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len)
+    )

@@ -1,0 +1,35 @@
+# The paper's primary contribution: sparse linear algebra over custom
+# semirings for overlap detection (SpGEMM) and transitive reduction, with 2D
+# SUMMA distribution (diBELLA 2D, Guidi et al. 2020).
+from .semiring import (  # noqa: F401
+    INF,
+    NUM_POS_PAIRS,
+    Semiring,
+    bool_semiring,
+    count_semiring,
+    minplus_orient_semiring,
+    overlap_semiring,
+    plus_times_f32,
+)
+from .spmat import EllMatrix, from_coo, merge_sorted_rows, prune  # noqa: F401
+from .spgemm import spgemm, spgemm_masked, transpose  # noqa: F401
+from .string_graph import (  # noqa: F401
+    OverlapClass,
+    build_overlap_graph,
+    classify_overlaps,
+    drop_contained,
+    edge_list,
+)
+from .transitive_reduction import (  # noqa: F401
+    TRStats,
+    transitive_reduction,
+    transitive_reduction_fused,
+)
+from .summa import (  # noqa: F401
+    DistEll,
+    collect,
+    dist_transitive_reduction,
+    distribute_ell,
+    summa_allgather,
+    summa_ring,
+)

@@ -1,0 +1,252 @@
+"""Static-capacity sparse matrices for TPU (ELL layout).
+
+CombBLAS stores dynamically-sized CSC/DCSC blocks; XLA/TPU require static
+shapes.  We therefore store a sparse ``n_rows × n_cols`` matrix as
+
+  * ``cols``: ``(n_rows, capacity)`` int32, column index per slot, ``-1`` empty,
+    **sorted ascending within each row** (invalid slots pushed to the end);
+  * ``vals``: an arbitrary value pytree whose leaves have leading shape
+    ``(n_rows, capacity, ...)`` — semiring values live here.
+
+The capacity is semantically justified by the pipeline itself: k-mer frequency
+is capped (max freq u), so A's columns have ≤u entries; overlap/string matrices
+have bounded row density (paper Table III).  Overflow is *surfaced* via an
+``overflow`` counter rather than silently dropped.
+
+All constructors run under jit with static ``n_rows``/``n_cols``/``capacity``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .semiring import Semiring, tree_where
+
+NO_COL = jnp.int32(-1)
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["cols", "vals"],
+    meta_fields=["n_cols"],
+)
+@dataclasses.dataclass
+class EllMatrix:
+    """ELL sparse matrix: see module docstring.  A pytree (jit-transparent)."""
+
+    cols: jnp.ndarray  # (n_rows, capacity) int32; -1 = empty; row-sorted
+    vals: Any  # pytree, leaves (n_rows, capacity, ...)
+    n_cols: int  # static
+
+    @property
+    def n_rows(self) -> int:
+        return self.cols.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.cols.shape[1]
+
+    @property
+    def mask(self) -> jnp.ndarray:
+        return self.cols >= 0
+
+    def nnz(self) -> jnp.ndarray:
+        return jnp.sum(self.mask)
+
+    def row_nnz(self) -> jnp.ndarray:
+        return jnp.sum(self.mask, axis=1)
+
+    def to_dense(self, semiring: Semiring) -> Any:
+        """Densify values (absent -> semiring zero). Returns pytree of
+        leaves with shape (n_rows, n_cols, ...)."""
+        n, k = self.cols.shape
+        # masked slots scatter to a dummy column so they never race
+        safe = jnp.where(self.mask, self.cols, self.n_cols)
+        rows = jnp.broadcast_to(jnp.arange(n)[:, None], (n, k))
+        zero = semiring.zero((n, self.n_cols + 1))
+
+        def scat(z, v):
+            return z.at[rows, safe].set(v)[:, : self.n_cols]
+
+        return jax.tree.map(scat, zero, self.vals)
+
+    def lookup(self, semiring: Semiring, query_cols: jnp.ndarray):
+        """Row-wise sorted lookup: for each (i, q) return the value at
+        ``self[i, query_cols[i, q]]`` (semiring zero if absent).
+
+        query_cols: (n_rows, Q) int32 (may contain -1).
+        Returns (vals pytree with leading (n_rows, Q), found mask).
+        """
+        n, k = self.cols.shape
+        big = jnp.where(self.mask, self.cols, jnp.int32(2**30))
+        q = query_cols
+        pos = jax.vmap(jnp.searchsorted)(big, jnp.where(q >= 0, q, 0))
+        pos = jnp.clip(pos, 0, k - 1)
+        hit_col = jnp.take_along_axis(big, pos, axis=1)
+        found = (hit_col == q) & (q >= 0)
+        got = jax.tree.map(
+            lambda v: jnp.take_along_axis(
+                v, pos.reshape(pos.shape + (1,) * (v.ndim - 2)), axis=1
+            ),
+            self.vals,
+        )
+        zero = semiring.zero(q.shape)
+        return tree_where(found, got, zero), found
+
+
+def _segmented_combine(flags: jnp.ndarray, vals: Any, add, axis: int = 0) -> Any:
+    """Inclusive segmented scan along ``axis``: combine vals within runs
+    (flags==True starts a new run).  Returns scanned vals (run-prefix sums
+    under ``add``); the last element of each run holds the run total."""
+
+    def op(x, y):
+        fx, vx = x
+        fy, vy = y
+        v = tree_where(fy, vy, add(vx, vy))
+        return (fx | fy, v)
+
+    _, out = jax.lax.associative_scan(op, (flags, vals), axis=axis)
+    return out
+
+
+def _rank_in_row_sorted(rows_sorted: jnp.ndarray, kept: jnp.ndarray) -> jnp.ndarray:
+    """Given row ids sorted ascending and a kept mask, rank of each kept entry
+    among kept entries of the same row (0-based)."""
+    c = jnp.cumsum(kept.astype(jnp.int32))
+    base_idx = jnp.searchsorted(rows_sorted, rows_sorted, side="left")
+    c_base = jnp.take(c, base_idx)
+    kept_base = jnp.take(kept.astype(jnp.int32), base_idx)
+    return c - c_base + kept_base - 1
+
+
+@partial(jax.jit, static_argnames=("n_rows", "n_cols", "capacity", "semiring"))
+def from_coo(
+    rows: jnp.ndarray,
+    cols: jnp.ndarray,
+    vals: Any,
+    valid: jnp.ndarray,
+    *,
+    n_rows: int,
+    n_cols: int,
+    capacity: int,
+    semiring: Semiring,
+):
+    """Build an EllMatrix from COO triplets, merging duplicate (row, col)
+    entries with ``semiring.add`` (merge order = input order, stable).
+
+    Returns (EllMatrix, overflow_count)."""
+    e = rows.shape[0]
+    rkey = jnp.where(valid, rows, n_rows)
+    ckey = jnp.where(valid, cols, n_cols)
+    order = jnp.lexsort((ckey, rkey))
+    rs, cs = rkey[order], ckey[order]
+    vs = jax.tree.map(lambda x: x[order], vals)
+    valid_s = valid[order]
+
+    prev_r = jnp.concatenate([jnp.full((1,), -2, rs.dtype), rs[:-1]])
+    prev_c = jnp.concatenate([jnp.full((1,), -2, cs.dtype), cs[:-1]])
+    new_run = (rs != prev_r) | (cs != prev_c)
+    scanned = _segmented_combine(new_run, vs, semiring.add, axis=0)
+    next_new = jnp.concatenate([new_run[1:], jnp.ones((1,), bool)])
+    kept = next_new & valid_s  # last element of each (row,col) run
+
+    rank = _rank_in_row_sorted(rs, kept)
+    in_cap = kept & (rank < capacity)
+    overflow = jnp.sum(kept & (rank >= capacity))
+
+    # Masked entries scatter to a dummy row (n_rows) so they can never race
+    # with a live write.
+    safe_r = jnp.where(in_cap, rs, n_rows)
+    safe_k = jnp.where(in_cap, rank, 0)
+    out_cols = jnp.full((n_rows + 1, capacity), NO_COL)
+    out_cols = out_cols.at[safe_r, safe_k].set(cs.astype(jnp.int32))[:n_rows]
+    zero = semiring.zero((n_rows + 1, capacity))
+
+    def scat(z, v):
+        return z.at[safe_r, safe_k].set(v)[:n_rows]
+
+    out_vals = jax.tree.map(scat, zero, scanned)
+    return EllMatrix(cols=out_cols, vals=out_vals, n_cols=n_cols), overflow
+
+
+def merge_sorted_rows(
+    cand_cols: jnp.ndarray, cand_vals: Any, *, capacity: int, semiring: Semiring
+):
+    """Per-row candidate merge: given (n, Q) candidate columns (−1 = invalid)
+    and value pytree (n, Q, ...), sort each row by column, ⊕-combine duplicates
+    and compact into an ELL row of ``capacity`` slots.
+
+    The workhorse of the local SpGEMM.  Returns (cols, vals, overflow)."""
+    n, q = cand_cols.shape
+    big = jnp.int32(2**30)
+    key = jnp.where(cand_cols >= 0, cand_cols, big)
+    order = jnp.argsort(key, axis=1)
+    cs = jnp.take_along_axis(key, order, axis=1)
+    vs = jax.tree.map(
+        lambda v: jnp.take_along_axis(
+            v, order.reshape(order.shape + (1,) * (v.ndim - 2)), axis=1
+        ),
+        cand_vals,
+    )
+    valid = cs < big
+    prev = jnp.concatenate([jnp.full((n, 1), -2, cs.dtype), cs[:, :-1]], axis=1)
+    new_run = cs != prev
+    scanned = _segmented_combine(new_run, vs, semiring.add, axis=1)
+    next_new = jnp.concatenate([new_run[:, 1:], jnp.ones((n, 1), bool)], axis=1)
+    kept = next_new & valid & ~semiring.is_zero(scanned)
+
+    # Compact: stable argsort moves kept entries (already col-ascending) first.
+    ckey = jnp.where(kept, cs, big)
+    order2 = jnp.argsort(ckey, axis=1)[:, :capacity]
+    out_cols_raw = jnp.take_along_axis(ckey, order2, axis=1)
+    out_cols = jnp.where(out_cols_raw < big, out_cols_raw.astype(jnp.int32), NO_COL)
+    out_vals = jax.tree.map(
+        lambda v: jnp.take_along_axis(
+            v, order2.reshape(order2.shape + (1,) * (v.ndim - 2)), axis=1
+        ),
+        scanned,
+    )
+    out_vals = tree_where(out_cols >= 0, out_vals, semiring.zero((n, capacity)))
+    overflow = jnp.sum(jnp.maximum(jnp.sum(kept, axis=1) - capacity, 0))
+    return out_cols, out_vals, overflow
+
+
+def ell_equal(a: EllMatrix, b: EllMatrix) -> bool:
+    """Structural + value equality (host-side, for tests)."""
+    if a.n_cols != b.n_cols or a.n_rows != b.n_rows:
+        return False
+    da = jax.tree.leaves(a.vals)
+    db = jax.tree.leaves(b.vals)
+    import numpy as np
+
+    if not np.array_equal(np.asarray(a.cols), np.asarray(b.cols)):
+        return False
+    return all(
+        np.allclose(np.asarray(x), np.asarray(y), equal_nan=True)
+        for x, y in zip(da, db)
+    )
+
+
+def prune(mat: EllMatrix, drop: jnp.ndarray, semiring: Semiring) -> EllMatrix:
+    """Remove entries where ``drop`` (n, capacity) is True, recompacting rows
+    so they stay sorted-by-column (the paper's R ∘ ¬I, §IV-E)."""
+    n, k = mat.cols.shape
+    keep = mat.mask & ~drop
+    big = jnp.int32(2**30)
+    key = jnp.where(keep, mat.cols, big)
+    order = jnp.argsort(key, axis=1)
+    new_raw = jnp.take_along_axis(key, order, axis=1)
+    new_cols = jnp.where(new_raw < big, new_raw, NO_COL)
+    new_vals = jax.tree.map(
+        lambda v: jnp.take_along_axis(
+            v, order.reshape(order.shape + (1,) * (v.ndim - 2)), axis=1
+        ),
+        mat.vals,
+    )
+    new_vals = tree_where(new_cols >= 0, new_vals, semiring.zero((n, k)))
+    return EllMatrix(cols=new_cols, vals=new_vals, n_cols=mat.n_cols)

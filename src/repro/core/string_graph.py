@@ -1,0 +1,209 @@
+"""Bidirected string-graph construction from alignment results (paper §II, §IV-E).
+
+Orientation encoding
+--------------------
+Each overlap is stored as directed entries ``i → j`` tagged with strand bits
+``(s_i, s_j)``: "read i used in orientation s_i has a suffix that overlaps a
+prefix of read j used in orientation s_j".  This is algebraically equivalent to
+the paper's bidirected arrow-head formulation (Fig. 1):
+
+    paper case 1  (suf(v1)  ~ pre(v2)):   i→j (0,0)
+    paper case 2  (suf(v1)  ~ pre(v2')):  i→j (0,1)
+    paper case 3  (suf(v1') ~ pre(v2)):   i→j (1,0)
+    paper case 4  (suf(v1') ~ pre(v2')) ≡ j→i (0,0)
+
+Every proper dovetail overlap emits exactly two directed entries — ``i→j``
+with strands (a,b) and overhang |unmatched suffix of j|, and the complement
+``j→i`` with strands (1−b, 1−a) and overhang |unmatched prefix of i| — so the
+matrix R is structurally symmetric and a walk can be traversed on either
+strand (paper: "we want to walk both v1→v2→v3 and v3'→v2'→v1'").
+
+The per-entry value is the MinPlus 4-vector of ``semiring.minplus_orient_semiring``
+(suffix length at combo 2·s_i + s_j, +inf elsewhere).
+
+Overlap classification from alignment coordinates (BELLA/miniasm convention):
+with i kept forward and j in its aligned orientation ``s``, alignment spans
+[bi, ei) on i (length li) and [bj, ej) on j (length lj):
+
+    contained   : the overlap covers one read end to end → discarded here
+                  ("contained overlaps are discarded during transitive
+                  reduction regardless of their alignment scores", §IV-D)
+    dovetail i→j: ei ≈ li and bj ≈ 0  (suffix of i meets prefix of oriented j)
+    dovetail j→i: bi ≈ 0 and ej ≈ lj
+    internal    : neither — a repeat-induced partial match; dropped.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .semiring import INF, minplus_orient_semiring
+from .spmat import EllMatrix, from_coo
+
+
+class OverlapClass(NamedTuple):
+    """Per-pair classification flags + directed-edge payloads.
+
+    For a pair classified ``fwd_ij`` (suffix of i meets prefix of oriented j)
+    the two directed entries are (i→j, strands_ij, suf_ij=right_j) and its
+    complement (j→i, comp(strands_ij), suf_ij_comp=left_i).  For ``fwd_ji``
+    they are (j→i, strands_ji, suf_ji=right_i) and (i→j, comp(strands_ji),
+    suf_ji_comp=left_j)."""
+
+    contained_i: jnp.ndarray  # i is contained in j
+    contained_j: jnp.ndarray
+    fwd_ij: jnp.ndarray  # dovetail edge i→j exists
+    fwd_ji: jnp.ndarray  # dovetail edge j→i exists
+    suf_ij: jnp.ndarray  # overhang of oriented j beyond the overlap
+    suf_ij_comp: jnp.ndarray  # overhang of i on the reverse walk (= bi)
+    suf_ji: jnp.ndarray  # overhang of i beyond the overlap (= li - ei)
+    suf_ji_comp: jnp.ndarray  # overhang of oriented j on reverse walk (= bj)
+    strands_ij: jnp.ndarray  # (E, 2) int32: (s_i, s_j) for edge i→j
+    strands_ji: jnp.ndarray
+
+
+def classify_overlaps(
+    bi, ei, li, bj, ej, lj, strand_j, *, end_fuzz: int = 25
+) -> OverlapClass:
+    """Vectorized overlap classification. All args (E,) int32 arrays; coords of
+    j are in its *oriented* frame (already flipped if strand_j == 1)."""
+    bi, ei, li = (jnp.asarray(x, jnp.int32) for x in (bi, ei, li))
+    bj, ej, lj = (jnp.asarray(x, jnp.int32) for x in (bj, ej, lj))
+    s = jnp.asarray(strand_j, jnp.int32)
+
+    left_i = bi
+    right_i = li - ei
+    left_j = bj
+    right_j = lj - ej
+
+    cont_i = (left_i <= end_fuzz) & (right_i <= end_fuzz)
+    cont_j = (left_j <= end_fuzz) & (right_j <= end_fuzz)
+    # if both contained (equal-span reads) treat the shorter as contained in
+    # the longer; ties → i contained.
+    both = cont_i & cont_j
+    cont_i = cont_i & (~both | (li <= lj))
+    cont_j = cont_j & (~both | (lj < li))
+
+    proper_ij = (right_i <= end_fuzz) & (left_j <= end_fuzz)
+    proper_ji = (left_i <= end_fuzz) & (right_j <= end_fuzz)
+    anycont = cont_i | cont_j
+    fwd_ij = proper_ij & ~anycont
+    fwd_ji = proper_ji & ~anycont
+
+    # edge i→j: i forward (0), j in strand s
+    strands_ij = jnp.stack([jnp.zeros_like(s), s], axis=-1)
+    # edge j→i: oriented-j suffix ~ i prefix → j used in strand s, i forward
+    strands_ji = jnp.stack([s, jnp.zeros_like(s)], axis=-1)
+    return OverlapClass(
+        contained_i=cont_i,
+        contained_j=cont_j,
+        fwd_ij=fwd_ij,
+        fwd_ji=fwd_ji,
+        suf_ij=right_j,
+        suf_ij_comp=left_i,
+        suf_ji=right_i,
+        suf_ji_comp=left_j,
+        strands_ij=strands_ij,
+        strands_ji=strands_ji,
+    )
+
+
+def _mp_entry(suffix, strands):
+    """(E,) suffix + (E,2) strands -> (E,4) MinPlus value."""
+    combo = 2 * strands[:, 0] + strands[:, 1]
+    return jnp.where(
+        jnp.arange(4)[None, :] == combo[:, None],
+        jnp.asarray(suffix, jnp.float32)[:, None],
+        INF,
+    )
+
+
+@partial(jax.jit, static_argnames=("n_reads", "capacity"))
+def build_overlap_graph(
+    read_i: jnp.ndarray,
+    read_j: jnp.ndarray,
+    cls: OverlapClass,
+    valid: jnp.ndarray,
+    *,
+    n_reads: int,
+    capacity: int,
+):
+    """Assemble the overlap matrix R (reads × reads, MinPlus 4-vector values)
+    from classified pairs.  Each proper dovetail contributes:
+
+        R[i, j] ⊕= value(suffix_ij at strands_ij)           (edge i→j)
+        R[j, i] ⊕= value(suffix_ji at (1−s_j, 1−s_i))       (complement)
+
+    plus the same two entries for pairs classified in the j→i direction.
+    Returns (R: EllMatrix, contained: (n,) bool, overflow)."""
+    sr = minplus_orient_semiring
+
+    e_ij = _mp_entry(cls.suf_ij, cls.strands_ij)
+    comp_ij = jnp.stack([1 - cls.strands_ij[:, 1], 1 - cls.strands_ij[:, 0]], -1)
+    e_ij_c = _mp_entry(cls.suf_ij_comp, comp_ij)
+
+    e_ji = _mp_entry(cls.suf_ji, cls.strands_ji)
+    comp_ji = jnp.stack([1 - cls.strands_ji[:, 1], 1 - cls.strands_ji[:, 0]], -1)
+    e_ji_c = _mp_entry(cls.suf_ji_comp, comp_ji)
+
+    rows = jnp.concatenate([read_i, read_j, read_j, read_i])
+    cols = jnp.concatenate([read_j, read_i, read_i, read_j])
+    vals = jnp.concatenate([e_ij, e_ij_c, e_ji, e_ji_c])
+    ok = jnp.concatenate(
+        [
+            valid & cls.fwd_ij,
+            valid & cls.fwd_ij,
+            valid & cls.fwd_ji,
+            valid & cls.fwd_ji,
+        ]
+    )
+
+    mat, overflow = from_coo(
+        rows,
+        cols,
+        vals,
+        ok,
+        n_rows=n_reads,
+        n_cols=n_reads,
+        capacity=capacity,
+        semiring=sr,
+    )
+    contained = jnp.zeros((n_reads,), bool)
+    safe_i = jnp.where(valid, read_i, 0)
+    safe_j = jnp.where(valid, read_j, 0)
+    contained = contained.at[safe_i].max(valid & cls.contained_i)
+    contained = contained.at[safe_j].max(valid & cls.contained_j)
+    return mat, contained, overflow
+
+
+def drop_contained(mat: EllMatrix, contained: jnp.ndarray) -> EllMatrix:
+    """Remove all edges incident to contained reads (paper §IV-D)."""
+    from .spmat import prune
+
+    n, k = mat.cols.shape
+    safe = jnp.where(mat.mask, mat.cols, 0)
+    drop = contained[:, None] | (contained[safe] & mat.mask)
+    return prune(mat, drop & mat.mask, minplus_orient_semiring)
+
+
+def edge_list(mat: EllMatrix):
+    """Host-side edge list [(i, j, combo, suffix)] for tests/inspection."""
+    import numpy as np
+
+    cols = np.asarray(mat.cols)
+    vals = np.asarray(mat.vals)
+    out = []
+    for i in range(cols.shape[0]):
+        for q in range(cols.shape[1]):
+            j = cols[i, q]
+            if j < 0:
+                continue
+            for c in range(4):
+                v = vals[i, q, c]
+                if np.isfinite(v):
+                    out.append((i, int(j), c, float(v)))
+    return out

@@ -1,0 +1,418 @@
+"""Distributed 2D Sparse SUMMA over semirings (paper §IV-D, §V-B).
+
+Process-grid mapping
+--------------------
+CombBLAS organizes P processes as a √P×√P grid; we map grid **rows** onto the
+mesh axes ``row_axes`` (``("data",)`` single-pod, ``("pod", "data")``
+multi-pod) and grid **columns** onto ``col_axis`` ("model").
+
+A distributed sparse matrix (``DistEll``) is a global ELL whose
+(rows, capacity) arrays are sharded ``P(row_axes, col_axis)``: the capacity
+axis is split into per-grid-column *blocks*, so the local shard of device
+(i, j) is exactly CombBLAS's 2D block A_ij — entries of rows
+``i·n/pr …`` whose (global) column ids fall in grid-column j's range.
+
+Algorithms
+----------
+* ``summa_allgather`` — the broadcast-all SUMMA variant: all-gather A along
+  grid rows' *column* axis (each device obtains its full block-row of A) and
+  B along grid *rows* (full block-column of B), then one local semiring
+  SpGEMM.  Moves the same words as staged SUMMA (W = am/√P per the paper's
+  Table I) with √P× the panel memory — the right trade at dry-run scale and
+  the baseline for §Perf.
+* ``summa_ring`` — Cannon-style ring for square grids: pre-skew with
+  ``collective_permute``, then √P pipelined stages of (local multiply ⊕
+  rotate).  Panel memory O(block); the per-stage permutes overlap with the
+  local multiply under XLA's latency-hiding scheduler — this is the
+  compute/comm-overlap variant recorded in EXPERIMENTS.md §Perf.
+* ``dist_transitive_reduction`` — Algorithm 2 with the N = R² square computed
+  by distributed SUMMA, the row-max reduced with an all-reduce over the grid
+  row, and the prune/element-wise steps local (they are "executed in-place so
+  that they do not contribute to communication time", §V-D).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .semiring import INF, Semiring, minplus_orient_semiring as MPSR, tree_where
+from .spgemm import spgemm
+from .spmat import EllMatrix, NO_COL, from_coo, merge_sorted_rows, prune
+
+
+@dataclasses.dataclass
+class DistEll:
+    """A 2D-block-distributed ELL matrix (host-side handle)."""
+
+    mat: EllMatrix  # global arrays, sharded P(row_axes, col_axis)
+    mesh: Mesh
+    row_axes: tuple  # mesh axes carrying grid rows, e.g. ("pod", "data")
+    col_axis: str  # mesh axis carrying grid columns
+
+    @property
+    def pr(self) -> int:
+        return int(
+            jnp.prod(jnp.array([self.mesh.shape[a] for a in self.row_axes]))
+        )
+
+    @property
+    def pc(self) -> int:
+        return self.mesh.shape[self.col_axis]
+
+    @property
+    def block_capacity(self) -> int:
+        return self.mat.capacity // self.pc
+
+    def spec(self) -> P:
+        return P(self.row_axes, self.col_axis)
+
+
+def distribute_ell(
+    rows: jnp.ndarray,
+    cols: jnp.ndarray,
+    vals: Any,
+    valid: jnp.ndarray,
+    *,
+    n_rows: int,
+    n_cols: int,
+    block_capacity: int,
+    semiring: Semiring,
+    mesh: Mesh,
+    row_axes: Sequence[str] = ("data",),
+    col_axis: str = "model",
+):
+    """Build a DistEll from COO triplets.  Entries are bucketed by global
+    column block (col // ceil(n_cols/pc)); each (row, block) gets
+    ``block_capacity`` slots.  Returns (DistEll, overflow)."""
+    pc = mesh.shape[col_axis]
+    cb = -(-n_cols // pc)  # ceil
+    blk = jnp.where(valid, cols // cb, 0)
+    # rank key: one pseudo-row per (row, block)
+    prow = rows * pc + blk
+    m2, overflow = from_coo(
+        prow,
+        cols,
+        vals,
+        valid,
+        n_rows=n_rows * pc,
+        n_cols=n_cols,
+        capacity=block_capacity,
+        semiring=semiring,
+    )
+    g_cols = m2.cols.reshape(n_rows, pc * block_capacity)
+    g_vals = jax.tree.map(
+        lambda v: v.reshape((n_rows, pc * block_capacity) + v.shape[2:]), m2.vals
+    )
+    spec = P(tuple(row_axes), col_axis)
+    sharding = NamedSharding(mesh, spec)
+    mat = EllMatrix(
+        cols=jax.device_put(g_cols, sharding),
+        vals=jax.tree.map(lambda x: jax.device_put(x, sharding), g_vals),
+        n_cols=n_cols,
+    )
+    return (
+        DistEll(mat=mat, mesh=mesh, row_axes=tuple(row_axes), col_axis=col_axis),
+        overflow,
+    )
+
+
+def collect(d: DistEll) -> EllMatrix:
+    """Gather a DistEll to a host-local EllMatrix (tests / small outputs)."""
+    return jax.tree.map(lambda x: jax.device_get(x), d.mat)
+
+
+def _local_spgemm_panels(
+    a_cols, a_vals, b_cols, b_vals, *, semiring, capacity, n_cols_out,
+    b_row_offset=None, row_chunk=None,
+):
+    """Local multiply of an A panel (n_loc, KA; global m-ids) by a B panel
+    (rows a contiguous global row-block starting at ``b_row_offset``, or the
+    full m when offset is None)."""
+    if b_row_offset is not None:
+        nb = b_cols.shape[0]
+        rebased = a_cols - b_row_offset
+        in_range = (rebased >= 0) & (rebased < nb) & (a_cols >= 0)
+        a_cols = jnp.where(in_range, rebased, NO_COL)
+    a = EllMatrix(cols=a_cols, vals=a_vals, n_cols=b_cols.shape[0])
+    b = EllMatrix(cols=b_cols, vals=b_vals, n_cols=n_cols_out)
+    c, ovf = spgemm(a, b, semiring=semiring, capacity=capacity,
+                    row_chunk=row_chunk)
+    return c.cols, c.vals, ovf
+
+
+def summa_allgather(
+    a: DistEll, b: DistEll, *, semiring: Semiring, out_block_capacity: int,
+    row_chunk: int | None = None, build_only: bool = False,
+):
+    """C = A ⊗ B (n×m · m×p). Returns (DistEll C, overflow).
+
+    Per-device comm: one all-gather of A along the grid columns
+    (words = nnz(A)·pc/P ≈ am/√P, matching Table I) and one all-gather of B
+    along the grid rows (words = nnz(B)·pr/P)."""
+    mesh = a.mesh
+    row_axes, col_axis = a.row_axes, a.col_axis
+    spec = P(row_axes, col_axis)
+    n_cols_out = b.mat.n_cols
+
+    def f(a_cols, a_vals, b_cols, b_vals):
+        # Block-row panel of A: local shard already holds the device's column
+        # block; gather the rest of the row (grid-column axis).
+        ac = jax.lax.all_gather(a_cols, col_axis, axis=1, tiled=True)
+        av = jax.tree.map(
+            lambda v: jax.lax.all_gather(v, col_axis, axis=1, tiled=True), a_vals
+        )
+        # Block-column panel of B: gather all grid rows.
+        bc = b_cols
+        bv = b_vals
+        for ax in reversed(row_axes):
+            bc = jax.lax.all_gather(bc, ax, axis=0, tiled=True)
+            bv = jax.tree.map(
+                lambda v: jax.lax.all_gather(v, ax, axis=0, tiled=True), bv
+            )
+        cc, cv, ovf = _local_spgemm_panels(
+            ac, av, bc, bv,
+            semiring=semiring,
+            capacity=out_block_capacity,
+            n_cols_out=n_cols_out,
+            row_chunk=row_chunk,
+        )
+        return cc, cv, jax.lax.psum(ovf, (*row_axes, col_axis))
+
+    fm = jax.jit(
+        jax.shard_map(
+            f,
+            mesh=mesh,
+            in_specs=(spec, spec, spec, spec),
+            out_specs=(spec, spec, P()),
+        )
+    )
+    if build_only:
+        return fm
+    cc, cv, ovf = fm(a.mat.cols, a.mat.vals, b.mat.cols, b.mat.vals)
+    cm = EllMatrix(cols=cc, vals=cv, n_cols=n_cols_out)
+    return DistEll(mat=cm, mesh=mesh, row_axes=row_axes, col_axis=col_axis), ovf
+
+
+def _skew_a(mat: EllMatrix, pr: int, pc: int) -> EllMatrix:
+    """Cannon pre-skew of A (host/global view): block (i, j) ← block
+    (i, (i+j) mod pc).  The capacity axis carries the column blocks, so this
+    is a per-block-row roll of block slices."""
+    n, ktot = mat.cols.shape
+    kb = ktot // pc
+    nb = n // pr
+    i_of_row = jnp.arange(n) // nb  # grid row per matrix row
+    j_of_slot = jnp.arange(ktot) // kb
+    s_of_slot = jnp.arange(ktot) % kb
+    src_j = (i_of_row[:, None] + j_of_slot[None, :]) % pc
+    idx = src_j * kb + s_of_slot[None, :]
+    take = lambda x: jnp.take_along_axis(
+        x, idx.reshape(idx.shape + (1,) * (x.ndim - 2)), axis=1
+    )
+    return EllMatrix(
+        cols=take(mat.cols), vals=jax.tree.map(take, mat.vals), n_cols=mat.n_cols
+    )
+
+
+def _skew_b(mat: EllMatrix, pr: int, pc: int) -> EllMatrix:
+    """Cannon pre-skew of B: block (i, j) ← block ((i+j) mod pr, j) — a
+    per-block-column roll of row blocks."""
+    n, ktot = mat.cols.shape
+    kb = ktot // pc
+    nb = n // pr
+    i_of_row = jnp.arange(n) // nb
+    r_in_blk = jnp.arange(n) % nb
+    j_of_slot = jnp.arange(ktot) // kb
+    src_i = (i_of_row[:, None] + j_of_slot[None, :]) % pr  # (n, ktot)
+    src_row = src_i * nb + r_in_blk[:, None]
+    take = lambda x: x[src_row, jnp.arange(ktot)[None, :]]
+    return EllMatrix(
+        cols=take(mat.cols), vals=jax.tree.map(take, mat.vals), n_cols=mat.n_cols
+    )
+
+
+def summa_ring(a: DistEll, b: DistEll, *, semiring: Semiring, out_block_capacity: int):
+    """Cannon-style ring SUMMA for square grids (pr == pc, single row axis).
+
+    After the pre-skew, device (i, j) holds A(i, (i+j) mod pc) and
+    B((i+j) mod pr, j); each of the pc stages does a local semiring multiply,
+    ⊕-merges into the accumulator, and rotates A left / B up with a static
+    ``ppermute`` ring.  Panel memory O(block) vs O(√P·block) for the
+    all-gather variant; the rotations overlap with the local multiply under
+    XLA's latency-hiding scheduler."""
+    mesh = a.mesh
+    assert len(a.row_axes) == 1, "ring SUMMA requires a single grid-row axis"
+    (row_axis,) = a.row_axes
+    col_axis = a.col_axis
+    pr, pc = mesh.shape[row_axis], mesh.shape[col_axis]
+    assert pr == pc, "ring SUMMA requires a square grid"
+    spec = P((row_axis,), col_axis)
+    n_cols_out = b.mat.n_cols
+    m_total = b.mat.cols.shape[0]
+    nb_b = m_total // pr  # B block row count == A column-block width
+    cb = -(-a.mat.n_cols // pc)
+
+    a_sk = _skew_a(a.mat, pr, pc)
+    b_sk = _skew_b(b.mat, pr, pc)
+
+    def f(a_cols, a_vals, b_cols, b_vals):
+        i = jax.lax.axis_index(row_axis)
+        j = jax.lax.axis_index(col_axis)
+        n_loc = a_cols.shape[0]
+        both = (row_axis, col_axis)
+        acc_cols = jax.lax.pvary(
+            jnp.full((n_loc, out_block_capacity), NO_COL, dtype=jnp.int32), both
+        )
+        acc_vals = jax.tree.map(
+            lambda x: jax.lax.pvary(x, both),
+            semiring.zero((n_loc, out_block_capacity)),
+        )
+        left = [((t + 1) % pc, t) for t in range(pc)]  # rotate left/up
+
+        def stage(s, carry):
+            acc_cols, acc_vals, ac, av, bc, bv, ovf = carry
+            k = (i + j + s) % pc  # current panel index
+            cc, cv, so = _local_spgemm_panels(
+                ac, av, bc, bv,
+                semiring=semiring,
+                capacity=out_block_capacity,
+                n_cols_out=n_cols_out,
+                b_row_offset=k * nb_b,
+            )
+            merged_cols = jnp.concatenate([acc_cols, cc], axis=1)
+            merged_vals = jax.tree.map(
+                lambda x, y: jnp.concatenate([x, y], axis=1), acc_vals, cv
+            )
+            mc, mv, mo = merge_sorted_rows(
+                merged_cols, merged_vals,
+                capacity=out_block_capacity, semiring=semiring,
+            )
+            ac2 = jax.lax.ppermute(ac, col_axis, left)
+            av2 = jax.tree.map(lambda v: jax.lax.ppermute(v, col_axis, left), av)
+            bc2 = jax.lax.ppermute(bc, row_axis, left)
+            bv2 = jax.tree.map(lambda v: jax.lax.ppermute(v, row_axis, left), bv)
+            return (mc, mv, ac2, av2, bc2, bv2, ovf + so + mo)
+
+        init = (
+            acc_cols, acc_vals, a_cols, a_vals, b_cols, b_vals,
+            jax.lax.pvary(jnp.int32(0), both),
+        )
+        acc_cols, acc_vals, *_, ovf = jax.lax.fori_loop(0, pc, stage, init)
+        return acc_cols, acc_vals, jax.lax.psum(ovf, (row_axis, col_axis))
+
+    fm = jax.jit(
+        jax.shard_map(
+            f, mesh=mesh, in_specs=(spec, spec, spec, spec),
+            out_specs=(spec, spec, P()),
+        )
+    )
+    cc, cv, ovf = fm(a_sk.cols, a_sk.vals, b_sk.cols, b_sk.vals)
+    cm = EllMatrix(cols=cc, vals=cv, n_cols=n_cols_out)
+    return DistEll(mat=cm, mesh=mesh, row_axes=a.row_axes, col_axis=col_axis), ovf
+
+
+# ---------------------------------------------------------------------------
+# Distributed transitive reduction (Algorithm 2 on the mesh).
+# ---------------------------------------------------------------------------
+
+
+def dist_transitive_reduction(
+    r: DistEll,
+    fuzz: float = 200.0,
+    *,
+    n_block_capacity: int | None = None,
+    max_iters: int = 10,
+    fused: bool = False,
+    row_chunk: int | None = None,
+    build_only: bool = False,
+):
+    """Distributed Algorithm 2.  ``fused=True`` uses the sampled square
+    (beyond-paper; N restricted to R's pattern — the A panel gather still
+    happens, but no B-panel pattern growth and no stage sort)."""
+    mesh = r.mesh
+    row_axes, col_axis = r.row_axes, r.col_axis
+    spec = P(row_axes, col_axis)
+    kb = r.block_capacity
+    if n_block_capacity is None:
+        n_block_capacity = min(kb * kb, 4 * kb)
+    n_total = r.mat.n_cols
+
+    def f(r_cols, r_vals):
+        def nnz_of(cols):
+            return jax.lax.psum(
+                jnp.sum(cols >= 0).astype(jnp.int32), (*row_axes, col_axis)
+            )
+
+        def body(carry):
+            r_cols, r_vals, prev, cur, it = carry
+            # --- N = R² (lines 3-4): allgather panels, local multiply ---
+            ac = jax.lax.all_gather(r_cols, col_axis, axis=1, tiled=True)
+            av = jax.lax.all_gather(r_vals, col_axis, axis=1, tiled=True)
+            bc, bv = r_cols, r_vals
+            for ax in reversed(row_axes):
+                bc = jax.lax.all_gather(bc, ax, axis=0, tiled=True)
+                bv = jax.lax.all_gather(bv, ax, axis=0, tiled=True)
+            a_loc = EllMatrix(cols=ac, vals=av, n_cols=n_total)
+            b_loc = EllMatrix(cols=bc, vals=bv, n_cols=n_total)
+            if fused:
+                from .spgemm import spgemm_masked
+
+                mask = EllMatrix(cols=r_cols, vals=r_vals, n_cols=n_total)
+                n_at_r = spgemm_masked(a_loc, b_loc, mask, semiring=MPSR,
+                                       row_chunk=row_chunk)
+                got, found = n_at_r.vals, mask.mask
+            else:
+                n_loc, _ = spgemm(
+                    a_loc, b_loc, semiring=MPSR, capacity=n_block_capacity,
+                    row_chunk=row_chunk,
+                )
+                got, found = n_loc.lookup(MPSR, r_cols)
+            # --- M = rowmax + fuzz (lines 5-7): local max, all-reduce row ---
+            vals_m = jnp.where(jnp.isfinite(r_vals), r_vals, -INF)
+            vals_m = jnp.where((r_cols >= 0)[:, :, None], vals_m, -INF)
+            local_max = jnp.max(vals_m, axis=(1, 2))
+            row_max = jax.lax.pmax(local_max, col_axis) + fuzz
+            # --- I = M ≥ N with orientation checks (line 8) ---
+            trans = (
+                (got <= row_max[:, None, None])
+                & jnp.isfinite(got)
+                & found[:, :, None]
+                & jnp.isfinite(r_vals)
+            )
+            # --- prune (line 9), local/in-place per §V-D ---
+            new_vals = jnp.where(trans, INF, r_vals)
+            dead = ~jnp.any(jnp.isfinite(new_vals), axis=-1) & (r_cols >= 0)
+            pruned = prune(
+                EllMatrix(cols=r_cols, vals=new_vals, n_cols=n_total), dead, MPSR
+            )
+            return (pruned.cols, pruned.vals, cur, nnz_of(pruned.cols), it + 1)
+
+        def cond(carry):
+            _, _, prev, cur, it = carry
+            return (cur != prev) & (it < max_iters)
+
+        init = (r_cols, r_vals, jnp.int32(-1), nnz_of(r_cols), jnp.int32(0))
+        r_cols, r_vals, _, nnz_f, iters = jax.lax.while_loop(cond, body, init)
+        return r_cols, r_vals, iters, nnz_f
+
+    fm = jax.jit(
+        jax.shard_map(
+            f, mesh=mesh, in_specs=(spec, spec),
+            out_specs=(spec, spec, P(), P()),
+        )
+    )
+    if build_only:
+        return fm
+    cols, vals, iters, nnz_f = fm(r.mat.cols, r.mat.vals)
+    out = DistEll(
+        mat=EllMatrix(cols=cols, vals=vals, n_cols=n_total),
+        mesh=mesh,
+        row_axes=row_axes,
+        col_axis=col_axis,
+    )
+    return out, iters, nnz_f

@@ -1,0 +1,1 @@
+from .pipeline import SyntheticLMData, TokenPacker  # noqa: F401

@@ -1,0 +1,4 @@
+# Pallas TPU kernels for the pipeline's compute hot spots:
+#   minplus/ — dense-block min-plus semiring matmul (transitive reduction)
+#   xdrop/   — banded x-drop alignment wavefront (pairwise alignment)
+# Validated on CPU via interpret=True against the pure-jnp oracles (ref.py).

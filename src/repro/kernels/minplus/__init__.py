@@ -1,0 +1,2 @@
+from .ops import minplus_matmul  # noqa: F401
+from .ref import minplus_matmul_ref  # noqa: F401

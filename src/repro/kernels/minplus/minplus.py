@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: blocked dense min-plus matmul with orientation combos.
+
+Hardware adaptation (DESIGN.md §2): min-plus is not a (+,×) ring, so the MXU
+is unusable — the kernel instead tiles (BM, BK)·(BK, BN) panels into VMEM and
+reduces k with VPU broadcast-add + min, accumulating the output block across
+the k grid dimension in-place (the revisited-output accumulation pattern).
+The orientation contraction (min over the middle strand c) rides along as two
+extra lanes.
+
+Block shapes default to (128, 128, 128) — 8×128-lane aligned; the innermost
+expansion buffer is (BM, BN, 2, 2, 2) f32 = 512 KB, well inside VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INF = float("inf")  # plain python float: Pallas kernels cannot capture traced consts
+
+
+def _minplus_kernel(a_ref, b_ref, o_ref):
+    bm = a_ref.shape[0]
+    bk = a_ref.shape[1]
+    bn = b_ref.shape[1]
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.full((bm, bn, 4), INF, jnp.float32)
+
+    a = a_ref[...].reshape(bm, bk, 2, 2)
+    b = b_ref[...].reshape(bk, bn, 2, 2)
+
+    def body(k, acc):
+        ak = jax.lax.dynamic_slice_in_dim(a, k, 1, axis=1)[:, 0]  # (BM, 2, 2)
+        bk_ = jax.lax.dynamic_slice_in_dim(b, k, 1, axis=0)[0]  # (BN, 2, 2)
+        s = ak[:, None, :, :, None] + bk_[None, :, None, :, :]
+        # (BM, BN, x, c, y) -> min over c
+        return jnp.minimum(acc, jnp.min(s, axis=3))
+
+    acc0 = jnp.full((bm, bn, 2, 2), INF, jnp.float32)
+    acc = jax.lax.fori_loop(0, bk, body, acc0)
+    o_ref[...] = jnp.minimum(o_ref[...], acc.reshape(bm, bn, 4))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def minplus_pallas(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """a (M, K, 4), b (K, N, 4) -> (M, N, 4) f32."""
+    m, k, _ = a.shape
+    n = b.shape[1]
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    pm, pn, pk = -(-m // bm) * bm, -(-n // bn) * bn, -(-k // bk) * bk
+    if (pm, pk) != (m, k):
+        a = jnp.pad(a, ((0, pm - m), (0, pk - k), (0, 0)),
+                    constant_values=jnp.inf)
+    if (pk, pn) != (k, n):
+        b = jnp.pad(b, ((0, pk - k), (0, pn - n), (0, 0)),
+                    constant_values=jnp.inf)
+    grid = (pm // bm, pn // bn, pk // bk)
+    out = pl.pallas_call(
+        _minplus_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk, 4), lambda i, j, kk: (i, kk, 0)),
+            pl.BlockSpec((bk, bn, 4), lambda i, j, kk: (kk, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn, 4), lambda i, j, kk: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((pm, pn, 4), jnp.float32),
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))
+    return out[:m, :n]

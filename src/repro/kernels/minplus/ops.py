@@ -1,0 +1,18 @@
+"""Jit'd public wrapper: picks the Pallas kernel (interpret on CPU, compiled
+on TPU) and exposes the same signature as the oracle."""
+
+from __future__ import annotations
+
+import jax
+
+from .minplus import minplus_pallas
+from .ref import minplus_matmul_ref  # noqa: F401
+
+
+def minplus_matmul(a, b, *, block_m: int = 128, block_n: int = 128,
+                   block_k: int = 128):
+    interpret = jax.default_backend() != "tpu"
+    return minplus_pallas(
+        a, b, block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret,
+    )

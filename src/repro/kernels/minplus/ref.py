@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the dense orientation-resolved min-plus matmul.
+
+N[i, j, 2x+y] = min_k min_c A[i, k, 2x+c] + B[k, j, 2c+y]
+(the dense-block core of Algorithm 2's N = R²; see core/semiring.py)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def minplus_matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """a (M, K, 4), b (K, N, 4) -> (M, N, 4), f32, +inf = absent."""
+    m, k, _ = a.shape
+    n = b.shape[1]
+    am = a.reshape(m, k, 2, 2)
+    bm = b.reshape(k, n, 2, 2)
+    # s[m, n, x, c, y] over k — reduce k in chunks to bound memory
+    out = jnp.full((m, n, 2, 2), jnp.inf, jnp.float32)
+    step = max(1, min(k, 512 * 512 // max(m * n // max(m, n), 1), 64))
+    for k0 in range(0, k, step):
+        ak = am[:, k0 : k0 + step]  # (M, kc, 2, 2)
+        bk = bm[k0 : k0 + step]  # (kc, N, 2, 2)
+        s = ak[:, :, None, :, :, None] + bk[None, :, :, None, :, :]
+        # dims: (M, kc, N, x, c, y) -> min over kc (1) and c (4)
+        s = jnp.min(s, axis=(1, 4))
+        out = jnp.minimum(out, s)
+    return out.reshape(m, n, 4)

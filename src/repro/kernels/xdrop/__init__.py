@@ -1,0 +1,2 @@
+from .ops import xdrop_extend_batch  # noqa: F401
+from .ref import xdrop_extend_batch_ref  # noqa: F401

@@ -1,0 +1,17 @@
+"""Jit'd public wrapper for the x-drop kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from .xdrop import xdrop_pallas
+from .ref import xdrop_extend_batch_ref  # noqa: F401
+
+
+def xdrop_extend_batch(a, base_a, step_a, len_a, b, base_b, step_b, len_b,
+                       **kw):
+    interpret = jax.default_backend() != "tpu"
+    return xdrop_pallas(
+        a, base_a, step_a, len_a, b, base_b, step_b, len_b,
+        interpret=interpret, **kw,
+    )

@@ -1,0 +1,22 @@
+"""Oracle for the banded x-drop extension kernel: the pure-jnp wavefront DP
+from assembly/alignment.py, vmapped over pairs."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from ...assembly.alignment import xdrop_extend
+
+
+def xdrop_extend_batch_ref(
+    a, base_a, step_a, len_a, b, base_b, step_b, len_b, *,
+    xdrop=15, match=1, mismatch=-1, gap=-1, band=33, max_steps=256,
+):
+    f = partial(
+        xdrop_extend, xdrop=xdrop, match=match, mismatch=mismatch, gap=gap,
+        band=band, max_steps=max_steps,
+    )
+    ext = jax.vmap(f)(a, base_a, step_a, len_a, b, base_b, step_b, len_b)
+    return ext.score, ext.ai, ext.bj

@@ -1,0 +1,149 @@
+"""Pallas TPU kernel: banded x-drop seed-extension wavefront.
+
+Hardware adaptation (DESIGN.md §2): SeqAn's SSE anti-diagonal vectorization
+becomes a (PAIRS_PER_BLOCK, BAND) wavefront living in VMEM/VREGs — the band
+fills the 128-wide lane dimension and a block of pairs fills the sublane
+dimension, so every VPU op advances BAND cells of PB alignments at once.
+The DP state is two wavefronts + running best (score, ai, bj); sequences are
+staged into VMEM by the BlockSpec.  Fixed trip count (max_steps) with
+x-drop retirement masking — identical semantics to the oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -(10**9) // 2  # plain int: Pallas kernels cannot capture traced consts
+
+
+def _xdrop_kernel(
+    a_ref, ba_ref, sa_ref, la_ref, b_ref, bb_ref, sb_ref, lb_ref,
+    score_ref, ai_ref, bj_ref,
+    *, band: int, max_steps: int, xdrop: int, match: int, mismatch: int,
+    gap: int,
+):
+    pb = a_ref.shape[0]
+    w = band
+    c = w // 2
+    offs = jnp.arange(w) - c  # (W,)
+    a = a_ref[...].astype(jnp.int32)  # (PB, LA)
+    b = b_ref[...].astype(jnp.int32)
+    ba = ba_ref[...].astype(jnp.int32)[:, None]  # (PB, 1)
+    sa = sa_ref[...].astype(jnp.int32)[:, None]
+    la = la_ref[...].astype(jnp.int32)[:, None]
+    bb = bb_ref[...].astype(jnp.int32)[:, None]
+    sb = sb_ref[...].astype(jnp.int32)[:, None]
+    lb = lb_ref[...].astype(jnp.int32)[:, None]
+    lmax_a = a.shape[1]
+    lmax_b = b.shape[1]
+
+    def fetch(seq, base, step, t, lim, lmax):
+        idx = base + step * t  # (PB, W)
+        safe = jnp.clip(idx, 0, lmax - 1)
+        v = jnp.take_along_axis(seq, safe, axis=1)
+        return v, (t >= 0) & (t < lim)
+
+    def step_fn(s, carry):
+        h1, h2, best, bi, bj, alive = carry
+        i = (s + offs[None, :]) // 2  # (1+PB broadcast, W)
+        j = (s - offs[None, :]) // 2
+        parity = ((s + offs[None, :]) % 2) == 0
+        av, va = fetch(a, ba, sa, i, la, lmax_a)
+        bv, vb = fetch(b, bb, sb, j, lb, lmax_b)
+        valid = parity & va & vb & (i >= 0) & (j >= 0)
+        sub = jnp.where(av == bv, match, mismatch)
+        diag = h2 + sub
+        up = jnp.concatenate(
+            [jnp.full((pb, 1), NEG), h1[:, :-1]], axis=1
+        ) + gap
+        left = jnp.concatenate(
+            [h1[:, 1:], jnp.full((pb, 1), NEG)], axis=1
+        ) + gap
+        h = jnp.maximum(diag, jnp.maximum(up, left))
+        h = jnp.where(valid, h, NEG)
+        h = jnp.where(h < best[:, None] - xdrop, NEG, h)
+        h = jnp.where(alive[:, None], h, NEG)
+        m = jnp.max(h, axis=1)
+        am = jnp.argmax(h, axis=1)
+        improved = m > best
+        best2 = jnp.where(improved, m, best)
+        ii = jnp.take_along_axis(i, am[:, None], axis=1)[:, 0]
+        jj = jnp.take_along_axis(j, am[:, None], axis=1)[:, 0]
+        bi2 = jnp.where(improved, ii + 1, bi)
+        bj2 = jnp.where(improved, jj + 1, bj)
+        alive2 = jnp.any(h > NEG, axis=1) & (s + 1 < la[:, 0] + lb[:, 0] - 1)
+        return (h, h1, best2, bi2, bj2, alive2)
+
+    h1 = jnp.full((pb, w), NEG)
+    h2 = jnp.where((offs == 0)[None, :], 0, NEG) | jnp.zeros((pb, w), jnp.int32)
+    init = (
+        h1, h2,
+        jnp.zeros((pb,), jnp.int32),
+        jnp.zeros((pb,), jnp.int32),
+        jnp.zeros((pb,), jnp.int32),
+        jnp.ones((pb,), bool),
+    )
+    h1, h2, best, bi, bj, alive = jax.lax.fori_loop(0, max_steps, step_fn, init)
+    score_ref[...] = best
+    ai_ref[...] = bi
+    bj_ref[...] = bj
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "band", "max_steps", "xdrop", "match", "mismatch", "gap",
+        "pairs_per_block", "interpret",
+    ),
+)
+def xdrop_pallas(
+    a, base_a, step_a, len_a, b, base_b, step_b, len_b, *,
+    band: int = 33, max_steps: int = 256, xdrop: int = 15, match: int = 1,
+    mismatch: int = -1, gap: int = -1, pairs_per_block: int = 8,
+    interpret: bool = True,
+):
+    e, lmax_a = a.shape
+    lmax_b = b.shape[1]
+    pb = min(pairs_per_block, e)
+    pe = -(-e // pb) * pb
+    pad = pe - e
+
+    def p1(x):
+        return jnp.pad(x, ((0, pad),))
+
+    def p2(x, l):
+        return jnp.pad(x, ((0, pad), (0, 0)))
+
+    a = p2(a, lmax_a)
+    b = p2(b, lmax_b)
+    base_a, step_a, len_a = p1(base_a), p1(step_a), p1(len_a)
+    base_b, step_b, len_b = p1(base_b), p1(step_b), p1(len_b)
+    grid = (pe // pb,)
+    kernel = functools.partial(
+        _xdrop_kernel, band=band, max_steps=max_steps, xdrop=xdrop,
+        match=match, mismatch=mismatch, gap=gap,
+    )
+    seq_spec_a = pl.BlockSpec((pb, lmax_a), lambda i: (i, 0))
+    seq_spec_b = pl.BlockSpec((pb, lmax_b), lambda i: (i, 0))
+    scal = pl.BlockSpec((pb,), lambda i: (i,))
+    score, ai, bj = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[seq_spec_a, scal, scal, scal, seq_spec_b, scal, scal, scal],
+        out_specs=[scal, scal, scal],
+        out_shape=[
+            jax.ShapeDtypeStruct((pe,), jnp.int32),
+            jax.ShapeDtypeStruct((pe,), jnp.int32),
+            jax.ShapeDtypeStruct((pe,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        a, base_a.astype(jnp.int32), step_a.astype(jnp.int32),
+        len_a.astype(jnp.int32), b, base_b.astype(jnp.int32),
+        step_b.astype(jnp.int32), len_b.astype(jnp.int32),
+    )
+    return score[:e], ai[:e], bj[:e]

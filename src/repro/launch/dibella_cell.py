@@ -1,0 +1,67 @@
+"""Dry-run cell for the paper's own pipeline (``--arch dibella``).
+
+Lowers, on the production mesh, the two distributed matrix stages of
+Algorithm 1/2 at H.-sapiens scale (Table IV):
+
+  * overlap SpGEMM  C = A·Aᵀ  (position-pair semiring, 2D SUMMA all-gather)
+  * transitive reduction loop on R (MinPlus semiring, sampled or full square)
+
+Inputs are ShapeDtypeStructs — the 4.2M-read matrices are never allocated.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.semiring import minplus_orient_semiring as MPSR, overlap_semiring
+from ..core.summa import DistEll, dist_transitive_reduction, summa_allgather
+from ..core.spmat import EllMatrix
+
+
+def build_cells(cfg, mesh, *, fused_tr: bool = True, row_chunk: int = 4096):
+    """Returns {"overlap": (fn, args_sds), "tr": (fn, args_sds)} ready for
+    ``fn.lower(*args).compile()``."""
+    row_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    col_axis = "model"
+    pc = mesh.shape[col_axis]
+    n = cfg.n_reads
+    m = cfg.m_kmers
+
+    # ---- overlap: C = A (n×m, pos values) · Aᵀ (m×n) ----
+    ka = pc * cfg.read_capacity
+    ku = pc * cfg.kmer_capacity
+    a_cols = jax.ShapeDtypeStruct((n, ka), jnp.int32)
+    a_vals = {"pos": jax.ShapeDtypeStruct((n, ka), jnp.int32)}
+    at_cols = jax.ShapeDtypeStruct((m, ku), jnp.int32)
+    at_vals = {"pos": jax.ShapeDtypeStruct((m, ku), jnp.int32)}
+
+    a_d = DistEll(
+        mat=EllMatrix(cols=a_cols, vals=a_vals, n_cols=m),
+        mesh=mesh, row_axes=row_axes, col_axis=col_axis,
+    )
+    at_d = DistEll(
+        mat=EllMatrix(cols=at_cols, vals=at_vals, n_cols=n),
+        mesh=mesh, row_axes=row_axes, col_axis=col_axis,
+    )
+    overlap_fn = summa_allgather(
+        a_d, at_d, semiring=overlap_semiring,
+        out_block_capacity=cfg.overlap_block_capacity,
+        row_chunk=row_chunk, build_only=True,
+    )
+    overlap_args = (a_cols, a_vals, at_cols, at_vals)
+
+    # ---- transitive reduction on R (n×n, MinPlus 4-vectors) ----
+    kr = pc * cfg.r_block_capacity
+    r_cols = jax.ShapeDtypeStruct((n, kr), jnp.int32)
+    r_vals = jax.ShapeDtypeStruct((n, kr, 4), jnp.float32)
+    r_d = DistEll(
+        mat=EllMatrix(cols=r_cols, vals=r_vals, n_cols=n),
+        mesh=mesh, row_axes=row_axes, col_axis=col_axis,
+    )
+    tr_fn = dist_transitive_reduction(
+        r_d, cfg.tr_fuzz, fused=fused_tr, row_chunk=row_chunk,
+        build_only=True,
+    )
+    tr_args = (r_cols, r_vals)
+    return {"overlap": (overlap_fn, overlap_args), "tr": (tr_fn, tr_args)}

@@ -1,0 +1,339 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first backend init (MULTI-POD DRY-RUN spec, step 0).
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from ..configs import (  # noqa: E402
+    ALL_NAMES,
+    SHAPES,
+    batch_specs,
+    cache_specs,
+    get_config,
+    runs_cell,
+)
+from ..models.model import init_params, make_train_step, make_serve_step, make_prefill_step, init_cache  # noqa: E402
+from ..optim import AdamW, cosine_schedule  # noqa: E402
+from ..runtime.sharding import apply_sharding_rules, batch_sharding, cache_sharding  # noqa: E402
+from .hlo_analysis import collective_bytes  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+from .roofline import (  # noqa: E402
+    RooflineTerms,
+    analytic_costs,
+    model_flops,
+    roofline_fraction,
+)
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "experiments", "dryrun")
+
+
+def _sds_like(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def _serve_dtype(tree):
+    def cast(s):
+        if s.dtype == jnp.float32:
+            return jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        return s
+
+    return jax.tree.map(cast, tree)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, *,
+               fsdp: bool = True, moe_impl: str | None = None,
+               summa_variant: str = "allgather", tr_variant: str = "fused",
+               mixed_precision: bool = False, cfg_overrides: dict | None = None):
+    """Lower + compile one (arch × shape × mesh) cell; returns result dict."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = len(mesh.devices.flatten())
+    t0 = time.time()
+
+    if arch == "dibella":
+        from .dibella_cell import build_cells
+
+        cfg = get_config(arch)
+        if cfg_overrides:
+            import dataclasses
+
+            cfg = dataclasses.replace(cfg, **cfg_overrides)
+        cells = build_cells(cfg, mesh, fused_tr=(tr_variant == "fused"))
+        out = {"arch": arch, "shape": shape_name, "mesh": "multi" if multi_pod else "single",
+               "chips": chips, "stages": {}}
+        tot_flops = tot_bytes = tot_coll = 0.0
+        peak_mem = 0
+        # loop-trip correction for HLO cost_analysis (bodies counted once):
+        # row-chunk lax.map lowers to a while loop; the TR loop adds ×iters.
+        pr = chips // mesh.shape["model"]
+        n_chunks = max(1, (cfg.n_reads // pr) // 4096)
+        tr_iters = 3  # paper §V-D: small constant
+        for stage, (fn, args) in cells.items():
+            lo = fn.lower(*args)
+            co = lo.compile()
+            ca = co.cost_analysis() or {}
+            ma = co.memory_analysis()
+            trips = n_chunks if stage == "overlap" else tr_iters * n_chunks
+            cb = collective_bytes(co.as_text(), default_loop_trips=tr_iters)
+            stage_mem = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                         + ma.output_size_in_bytes)
+            peak_mem = max(peak_mem, stage_mem)
+            out["stages"][stage] = {
+                "loop_trip_multiplier": trips,
+                "flops_per_device": float(ca.get("flops", 0.0)) * trips,
+                "bytes_per_device": float(ca.get("bytes accessed", 0.0)) * trips,
+                "collective_bytes_per_device": float(cb["total_bytes"]),
+                "collective_by_op": cb["by_op"],
+                "memory": {
+                    "argument": ma.argument_size_in_bytes,
+                    "temp": ma.temp_size_in_bytes,
+                    "output": ma.output_size_in_bytes,
+                },
+            }
+            tot_flops += float(ca.get("flops", 0.0)) * trips
+            tot_bytes += float(ca.get("bytes accessed", 0.0)) * trips
+            tot_coll += float(cb["total_bytes"])
+        # MODEL_FLOPS analogue: semiring ops of the sampled TR + overlap
+        # (each candidate k-mer pair = 1 ⊗; each TR candidate = 8 add+min)
+        pc = mesh.shape["model"]
+        model_ops = (
+            cfg.n_reads * (pc * cfg.read_capacity) * cfg.kmer_capacity
+            + 3 * cfg.n_reads * (pc * cfg.r_block_capacity) ** 2 * 8
+        )
+        terms = RooflineTerms(
+            arch=arch, shape=shape_name,
+            mesh="multi" if multi_pod else "single", chips=chips,
+            flops_per_device=tot_flops, bytes_per_device=tot_bytes,
+            collective_bytes_per_device=tot_coll,
+            model_flops_global=float(model_ops),
+            peak_memory_bytes=float(peak_mem),
+        ).finalize()
+        out["roofline"] = terms.to_dict()
+        out["roofline_fraction"] = roofline_fraction(terms)
+        out["compile_seconds"] = time.time() - t0
+        return out
+
+    cfg = get_config(arch)
+    import dataclasses
+
+    if moe_impl:
+        cfg = dataclasses.replace(cfg, moe_impl=moe_impl)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    if not runs_cell(arch, shape_name):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "pure full-attention arch at 524k decode "
+                          "(DESIGN.md §4)"}
+
+    batch_sds = batch_specs(cfg, shape)
+    params_sds = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    p_shardings = apply_sharding_rules(params_sds, mesh, fsdp=fsdp)
+    b_sharding = jax.tree.map(
+        lambda sds: batch_sharding(mesh, sds.shape[0]), batch_sds
+    )
+
+    if shape.kind == "train":
+        opt = AdamW(learning_rate=cosine_schedule(3e-4, 100, 10000))
+        opt_sds = jax.eval_shape(lambda: opt.init(params_sds))
+        o_shardings = type(opt_sds)(
+            mu=jax.tree.map(lambda s: s, p_shardings),
+            nu=jax.tree.map(lambda s: s, p_shardings),
+        )
+        step_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        state_sds = (params_sds, opt_sds, step_sds)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        state_sh = (p_shardings, o_shardings, NamedSharding(mesh, P()))
+        fn = make_train_step(cfg, opt, mesh=mesh,
+                             mixed_precision=mixed_precision)
+        lowered = jax.jit(
+            fn, in_shardings=(state_sh, b_sharding), donate_argnums=(0,)
+        ).lower(state_sds, batch_sds)
+        loop_trips = cfg.n_periods
+    elif shape.kind == "prefill":
+        params_serve = _serve_dtype(params_sds)
+        ps = apply_sharding_rules(params_serve, mesh, fsdp=False)
+        caches = cache_specs(cfg, shape)
+        c_shard = cache_sharding(mesh, caches, seq_sharded=True)
+        fn = make_prefill_step(cfg, mesh=mesh)
+        lowered = jax.jit(
+            fn, in_shardings=(ps, c_shard, b_sharding), donate_argnums=(1,)
+        ).lower(params_serve, caches, batch_sds)
+        loop_trips = cfg.n_periods
+    else:  # decode
+        params_serve = _serve_dtype(params_sds)
+        ps = apply_sharding_rules(params_serve, mesh, fsdp=False)
+        caches = cache_specs(cfg, shape)
+        seq_sharded = True
+        c_shard = cache_sharding(mesh, caches, seq_sharded=seq_sharded)
+        fn = make_serve_step(
+            cfg, mesh=mesh,
+            seq_shards=mesh.shape["model"] if seq_sharded else 1,
+        )
+        pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        lowered = jax.jit(
+            fn,
+            in_shardings=(ps, c_shard, b_sharding, NamedSharding(mesh, P())),
+            donate_argnums=(1,),
+        ).lower(params_serve, caches, batch_sds, pos_sds)
+        loop_trips = cfg.n_periods
+
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    cb = collective_bytes(compiled.as_text(), default_loop_trips=loop_trips)
+    mf = model_flops(cfg, shape.kind, shape.seq_len, shape.global_batch)
+    # analytic compute/memory (HLO cost_analysis counts while bodies once —
+    # see roofline.py); HLO raw numbers recorded alongside.
+    an_flops, an_bytes = analytic_costs(
+        cfg, shape.kind, shape.seq_len, shape.global_batch, chips
+    )
+    terms = RooflineTerms(
+        arch=arch, shape=shape_name,
+        mesh="multi" if multi_pod else "single", chips=chips,
+        flops_per_device=an_flops,
+        bytes_per_device=an_bytes,
+        collective_bytes_per_device=float(
+            cb.get("total_bytes_tpu_estimate", cb["total_bytes"])
+        ),
+        model_flops_global=mf,
+        peak_memory_bytes=float(
+            ma.argument_size_in_bytes + ma.temp_size_in_bytes
+        ),
+        loop_flagged=cb["flagged"],
+    ).finalize()
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "chips": chips,
+        "memory": {
+            "argument_bytes_per_device": ma.argument_size_in_bytes,
+            "temp_bytes_per_device": ma.temp_size_in_bytes,
+            "output_bytes_per_device": ma.output_size_in_bytes,
+            "fits_16GB": bool(
+                ma.argument_size_in_bytes + ma.temp_size_in_bytes < 16e9
+            ),
+        },
+        "cost_hlo_raw": {k: float(v) for k, v in ca.items()
+                         if k in ("flops", "bytes accessed")},
+        "collectives": cb["by_op"],
+        "collective_bytes": cb["total_bytes"],
+        "collective_bytes_tpu_estimate": cb.get(
+            "total_bytes_tpu_estimate", cb["total_bytes"]),
+        "roofline": terms.to_dict(),
+        "roofline_fraction": roofline_fraction(terms),
+        "compile_seconds": time.time() - t0,
+    }
+
+
+def cell_path(arch, shape, mesh_kind, tag=""):
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    t = f"_{tag}" if tag else ""
+    return os.path.join(CACHE_DIR, f"{arch}__{shape}__{mesh_kind}{t}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--fsdp", action="store_true", default=True)
+    ap.add_argument("--no-fsdp", dest="fsdp", action="store_false")
+    ap.add_argument("--moe-impl", default=None)
+    ap.add_argument("--tr-variant", default="fused")
+    ap.add_argument("--mixed-precision", action="store_true")
+    ap.add_argument("--ssd-bf16", action="store_true")
+    ap.add_argument("--batch-over-model", action="store_true")
+    ap.add_argument("--sharded-cache-update", action="store_true")
+    ap.add_argument("--ce-chunk", type=int, default=None)
+    ap.add_argument("--dibella-u", type=int, default=None)
+    ap.add_argument("--bf16-grad-act", action="store_true")
+    ap.add_argument("--decode-unroll", action="store_true")
+    ap.add_argument("--ssd-chunk", type=int, default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        # enumerate the full matrix as subprocesses (isolation per compile)
+        import subprocess
+
+        cells = []
+        for arch in ALL_NAMES:
+            shapes = ["train_4k"] if arch == "dibella" else list(SHAPES)
+            for shape in shapes:
+                for mk in ("single", "multi"):
+                    cells.append((arch, shape, mk))
+        for arch, shape, mk in cells:
+            path = cell_path(arch, shape, mk, args.tag)
+            if os.path.exists(path) and not args.force:
+                print(f"[cached] {arch} {shape} {mk}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+                   arch, "--shape", shape, "--mesh", mk]
+            if args.tag:
+                cmd += ["--tag", args.tag]
+            print(f"[run] {arch} {shape} {mk}", flush=True)
+            r = subprocess.run(cmd, capture_output=True, text=True)
+            if r.returncode != 0:
+                print(r.stdout[-2000:])
+                print(r.stderr[-4000:])
+                print(f"[FAIL] {arch} {shape} {mk}")
+        return
+
+    overrides = {}
+    if args.ssd_bf16:
+        overrides["ssd_bf16"] = True
+    if args.batch_over_model:
+        overrides["batch_over_model"] = True
+    if args.sharded_cache_update:
+        overrides["sharded_cache_update"] = True
+    if args.ce_chunk:
+        overrides["ce_chunk"] = args.ce_chunk
+    if args.dibella_u:
+        overrides["kmer_capacity"] = args.dibella_u
+    if args.bf16_grad_act:
+        overrides["bf16_grad_activations"] = True
+    if args.decode_unroll:
+        overrides["decode_unroll"] = True
+    if args.ssd_chunk:
+        overrides["ssd_chunk"] = args.ssd_chunk
+    res = lower_cell(
+        args.arch, args.shape, args.mesh == "multi", fsdp=args.fsdp,
+        moe_impl=args.moe_impl, tr_variant=args.tr_variant,
+        mixed_precision=args.mixed_precision, cfg_overrides=overrides or None,
+    )
+    path = cell_path(args.arch, args.shape, args.mesh, args.tag)
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    if res.get("skipped"):
+        print(f"SKIP {args.arch} {args.shape}: {res['reason']}")
+        return
+    print(json.dumps(
+        {k: res.get(k) for k in ("arch", "shape", "mesh", "chips",
+                                 "collective_bytes", "roofline_fraction",
+                                 "compile_seconds")},
+        indent=1,
+    ))
+    print("memory:", res.get("memory") or res.get("stages", {}).keys())
+    rt = res["roofline"]
+    print(f"terms: compute={rt['compute_s']:.4e}s memory={rt['memory_s']:.4e}s "
+          f"collective={rt['collective_s']:.4e}s -> {rt['bottleneck']}")
+
+
+if __name__ == "__main__":
+    main()

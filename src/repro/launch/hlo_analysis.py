@@ -1,0 +1,118 @@
+"""HLO post-partitioning analysis: collective bytes + while-loop awareness.
+
+``cost_analysis()`` gives FLOPs/bytes but NOT collective traffic, so we parse
+the compiled HLO text (§ROOFLINE spec) and sum the sizes of every
+``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` instruction.
+
+Conventions (XLA prints operand *names*, not shapes, so we use the
+instruction's OUTPUT shape — stated per op):
+  all-gather          output = full gathered buffer ≈ bytes received ×P/(P−1)
+  all-reduce          output = payload exchanged (ring: 2×(P−1)/P × this)
+  reduce-scatter      output = received shard (input = this × group)
+  all-to-all          output = buffer resent
+  collective-permute  output = bytes sent
+
+While-loop handling: scanned layer stacks and the TR convergence loop appear
+ONCE in HLO.  XLA stamps every instruction with
+``metadata={op_name="jit(...)/.../while/body/..."}``; any collective whose
+op_name contains ``/while/`` is multiplied by ``default_loop_trips`` (the
+caller passes the known scan length / TR iteration count).
+
+CPU-upcast correction: the XLA *CPU* backend converts bf16 dot operands to
+f32, so collectives adjacent to matmuls are measured at 2× their TPU size
+(verified: the gathered operands are ``convert*`` fusions).  f32 collectives
+whose operand is produced by a convert fusion are additionally counted at
+bf16 size in ``total_bytes_tpu_estimate`` — the number a TPU compile of the
+same HLO would move.  Both totals are recorded.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)(-start|-done)?\("
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo: str, default_loop_trips: int = 1) -> Dict:
+    """Loop-aware per-device collective byte count (see module docstring).
+    Returns {"total_bytes", "by_op", "static_bytes", "flagged",
+    "n_instructions"}."""
+    # first pass: map instruction name -> producing line (for upcast check)
+    defs: Dict[str, str] = {}
+    for raw in hlo.splitlines():
+        dm = re.match(r"\s*(?:ROOT )?%([\w\.\-]+) = ", raw)
+        if dm:
+            defs[dm.group(1)] = raw
+
+    total = 0
+    total_tpu = 0
+    static = 0
+    by_op: Dict[str, int] = {}
+    n_inst = 0
+    for raw in hlo.splitlines():
+        ln = raw.strip()
+        m = _OP_RE.search(ln)
+        if not m:
+            continue
+        if m.group(3) == "-done":  # -start carries the shape; skip the pair
+            continue
+        out_part = m.group(1)
+        op = m.group(2)
+        b = 0
+        f32_bytes = 0
+        for dt, dims in _SHAPE_RE.findall(out_part):
+            sb = _shape_bytes(dt, dims)
+            b += sb
+            if dt == "f32":
+                f32_bytes += sb
+        if b == 0:
+            continue
+        n_inst += 1
+        meta = re.search(r'op_name="([^"]*)"', ln)
+        in_loop = bool(meta and "/while/" in meta.group(1))
+        trips = default_loop_trips if in_loop else 1
+        # CPU-upcast detection: operand produced by a convert fusion
+        b_tpu = b
+        if f32_bytes:
+            om = re.search(r"\(%([\w\.\-]+)[,)]", ln[ln.index(op):])
+            if om and "convert" in defs.get(om.group(1), ""):
+                b_tpu = b - f32_bytes // 2
+        by_op[op] = by_op.get(op, 0) + b * trips
+        total += b * trips
+        total_tpu += b_tpu * trips
+        static += b
+    return {
+        "total_bytes": total,
+        "total_bytes_tpu_estimate": total_tpu,
+        "by_op": by_op,
+        "static_bytes": static,
+        "flagged": False,
+        "n_instructions": n_inst,
+    }

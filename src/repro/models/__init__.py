@@ -1,0 +1,3 @@
+# LM substrate: the 10 assigned architectures (dense / MoE / SSM / hybrid /
+# audio / VLM backbones) as pure-JAX modules with mesh-aware sharding.
+from .model import ModelConfig, init_params, make_train_step, make_serve_step  # noqa: F401

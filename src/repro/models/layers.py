@@ -1,0 +1,86 @@
+"""Shared transformer layers (pure JAX, mesh-aware via logical specs).
+
+Params are nested dicts of fp32 arrays; compute casts to the config dtype
+(bf16 by default) with fp32 softmax/normalization statistics.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope_freqs(positions: jnp.ndarray, d_head: int, theta: float) -> tuple:
+    """positions (...,) -> cos/sin (..., d_head//2), fp32."""
+    half = d_head // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _rope_rotate(x, cos, sin, sign):
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    c = cos[..., None, :]  # broadcast over heads
+    s = sign * sin[..., None, :]
+    out1 = x1 * c - x2 * s
+    out2 = x2 * c + x1 * s
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+@jax.custom_vjp
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x (..., S, H, D); cos/sin (..., S, D//2). Rotate-half convention.
+
+    custom_vjp: the transpose of a rotation is the inverse rotation; doing it
+    explicitly keeps the cotangent in x's dtype — without this the f32
+    cos/sin promote every q/k/v cotangent (and every backward collective
+    downstream of them) to f32.  Forward math is unchanged (f32 angles)."""
+    return _rope_rotate(x, cos, sin, 1.0)
+
+
+def _rope_fwd(x, cos, sin):
+    return _rope_rotate(x, cos, sin, 1.0), (cos, sin)
+
+
+def _rope_bwd(res, g):
+    cos, sin = res
+    dx = _rope_rotate(g, cos, sin, -1.0)  # exact transpose, cast to g.dtype
+    return (dx, jnp.zeros_like(cos), jnp.zeros_like(sin))
+
+
+apply_rope.defvjp(_rope_fwd, _rope_bwd)
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray, w_down: jnp.ndarray):
+    g = dense(x, w_gate)
+    u = dense(x, w_up)
+    return dense(jax.nn.silu(g) * u, w_down)
+
+
+def init_dense(key, d_in: int, d_out: int, scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(
+        jnp.float32
+    )
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def param_count(params: Any) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))

@@ -1,0 +1,167 @@
+"""Mamba-2 SSD (state-space duality) layer — chunked scan formulation.
+
+Training/prefill uses the SSD block decomposition (Mamba-2 paper §6): within a
+chunk of Q tokens the recurrence is materialized as a decay-masked quadratic
+form (maps onto the MXU); across chunks a (B, H, N, P) state is carried by a
+``lax.scan``.  Decode keeps the recurrent state explicitly — O(1) per token,
+which is why mamba2/hymba are the archs that run the ``long_500k`` cell.
+
+Shapes: d_inner = expand·d_model, H = d_inner/headdim heads, state N,
+B/C shared across heads (G = 1 group), per-step decay a_t = exp(Δ_t·A).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, rms_norm
+
+
+class SSMState(NamedTuple):
+    h: jnp.ndarray  # (B, H, N, P) inter-chunk state
+    conv: jnp.ndarray  # (B, W-1, conv_dim) conv tail
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv1d. x (B, S, C), w (W, C), b (C,).
+    Returns (y, new_tail)."""
+    bsz, s, c = x.shape
+    wlen = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((bsz, wlen - 1, c), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = jnp.zeros_like(x)
+    for t in range(wlen):
+        y = y + xp[:, t : t + s, :] * w[t].astype(x.dtype)
+    y = y + b.astype(x.dtype)
+    return jax.nn.silu(y), xp[:, -(wlen - 1) :, :] if wlen > 1 else pad
+
+
+def ssd_chunked(xh, dt, a_log, bmat, cmat, *, chunk: int = 128,
+                compute_bf16: bool = False):
+    """SSD forward.
+
+    xh (B, S, H, P); dt (B, S, H) post-softplus; a_log (H,) (A = −exp(a_log));
+    bmat/cmat (B, S, N).  Returns y (B, S, H, P) and final state (B, H, N, P).
+    ``compute_bf16`` keeps the Δ-scaled inputs and chunk outputs in bf16
+    (§Perf memory fix for train_4k; the recurrent state h stays f32).
+    """
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    nc = -(-s // q)
+    pad = nc * q - s
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (H,) negative
+    loga = dt.astype(jnp.float32) * a  # (B, S', H) log decay per step
+    cdt = jnp.bfloat16 if compute_bf16 else jnp.float32
+    xc = (xh * dt[..., None]).astype(cdt)  # Δ-scaled input
+
+    xs = xc.reshape(b, nc, q, h, p).transpose(1, 0, 2, 3, 4)
+    ls = loga.reshape(b, nc, q, h).transpose(1, 0, 2, 3)
+    bs = bmat.reshape(b, nc, q, n).transpose(1, 0, 2, 3).astype(cdt)
+    cs = cmat.reshape(b, nc, q, n).transpose(1, 0, 2, 3).astype(cdt)
+
+    @jax.checkpoint  # backward recomputes intra-chunk buffers
+    def chunk_step(hstate, inp):
+        xq, lq, bq, cq = inp  # (B,Q,H,P), (B,Q,H), (B,Q,N), (B,Q,N)
+        cum = jnp.cumsum(lq, axis=1)  # L_t inclusive
+        # intra-chunk: scores[t, s] = (C_t·B_s) exp(L_t − L_s) for s ≤ t
+        cb = jnp.einsum("btn,bsn->bts", cq, bq,
+                        preferred_element_type=jnp.float32)  # (B,Q,Q)
+        gap = cum[:, :, None, :] - cum[:, None, :, :]  # (B,t,s,H)
+        tri = (jnp.arange(q)[:, None] >= jnp.arange(q)[None, :])[None, :, :, None]
+        w = (jnp.where(tri, jnp.exp(gap), 0.0) * cb[..., None]).astype(cdt)
+        y_intra = jnp.einsum("btsh,bshp->bthp", w, xq,
+                             preferred_element_type=jnp.float32)
+        # contribution of the carried state: Y_t += C_t · h · exp(L_t)
+        y_inter = jnp.einsum(
+            "btn,bhnp->bthp", cq.astype(jnp.float32), hstate
+        ) * jnp.exp(cum)[..., None]
+        # new state: h' = exp(L_end) h + Σ_s exp(L_end − L_s) B_s ⊗ x_s
+        lend = cum[:, -1, :]  # (B,H)
+        decay_s = jnp.exp(lend[:, None, :] - cum).astype(cdt)  # (B,Q,H)
+        s_chunk = jnp.einsum("bsn,bsh,bshp->bhnp", bq, decay_s, xq,
+                             preferred_element_type=jnp.float32)
+        h2 = jnp.exp(lend)[:, :, None, None] * hstate + s_chunk
+        return h2, y_intra + y_inter
+
+    h0 = jnp.zeros((b, h, n, p), jnp.float32)
+    hfin, ys = jax.lax.scan(chunk_step, h0, (xs, ls, bs, cs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * q, h, p)[:, :s]
+    return y.astype(xh.dtype), hfin
+
+
+def ssd_decode_step(hstate, x1, dt1, a_log, b1, c1):
+    """One-token recurrent update. x1 (B, H, P), dt1 (B, H), b1/c1 (B, N)."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    decay = jnp.exp(dt1.astype(jnp.float32) * a)  # (B, H)
+    upd = jnp.einsum("bn,bhp->bhnp", b1.astype(jnp.float32),
+                     (x1 * dt1[..., None]).astype(jnp.float32))
+    h2 = decay[:, :, None, None] * hstate + upd
+    y = jnp.einsum("bn,bhnp->bhp", c1.astype(jnp.float32), h2)
+    return h2, y.astype(x1.dtype)
+
+
+def mamba2_params_shapes(d_model: int, *, expand: int, headdim: int, state: int,
+                         conv_width: int):
+    d_inner = expand * d_model
+    h = d_inner // headdim
+    conv_dim = d_inner + 2 * state
+    return {
+        "d_inner": d_inner,
+        "n_heads": h,
+        "conv_dim": conv_dim,
+        "in_features": 2 * d_inner + 2 * state + h,
+        "conv_width": conv_width,
+    }
+
+
+def mamba2_forward(x, params, cfg, *, state: SSMState | None = None,
+                   chunk: int = 128, mesh=None):
+    """Full Mamba-2 mixer. x (B, S, D). Returns (y (B, S, D), SSMState)."""
+    bsz, s, _ = x.shape
+    dims = mamba2_params_shapes(
+        x.shape[-1], expand=cfg.ssm_expand, headdim=cfg.ssm_headdim,
+        state=cfg.ssm_state, conv_width=cfg.conv_width,
+    )
+    di, h, n = dims["d_inner"], dims["n_heads"], cfg.ssm_state
+    proj = dense(x, params["in_proj"])  # (B,S, 2di+2n+h)
+    z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    xconv, new_tail = _causal_conv(
+        xbc, params["conv_w"], params["conv_b"],
+        None if state is None else state.conv,
+    )
+    xh = xconv[..., :di].reshape(bsz, s, h, di // h)
+    if mesh is not None:
+        # SSM heads are independent → shard H over "model" (TP for SSD)
+        from .model import _csc, _dp_axes
+
+        xh = _csc(xh, mesh, _dp_axes(mesh), None, "model", None)
+    bmat = xconv[..., di : di + n]
+    cmat = xconv[..., di + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    if s == 1 and state is not None:
+        h2, y1 = ssd_decode_step(
+            state.h, xh[:, 0], dt[:, 0], params["a_log"], bmat[:, 0], cmat[:, 0]
+        )
+        y = y1[:, None]
+        hfin = h2
+    else:
+        y, hfin = ssd_chunked(xh, dt, params["a_log"], bmat, cmat, chunk=chunk,
+                              compute_bf16=getattr(cfg, "ssd_bf16", False))
+    y = y + xh * params["d_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["norm"])
+    out = dense(y, params["out_proj"])
+    return out, SSMState(h=hfin, conv=new_tail)

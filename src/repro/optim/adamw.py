@@ -1,0 +1,62 @@
+"""AdamW with decoupled weight decay, global-norm clipping and fp32 master
+moments (pure JAX; no external deps)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jnp.ndarray], jnp.ndarray] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float | None = 1.0
+
+    def init(self, params) -> OptState:
+        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return OptState(mu=jax.tree.map(z, params), nu=jax.tree.map(z, params))
+
+    def _lr(self, step):
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, grads, state: OptState, params, step):
+        """Returns (updates, new_state); apply as p + u."""
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm is not None:
+            gn = jnp.sqrt(
+                sum(jnp.sum(g * g) for g in jax.tree.leaves(g32))
+            )
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gn, 1e-12))
+            g32 = jax.tree.map(lambda g: g * scale, g32)
+        t = step.astype(jnp.float32) + 1.0
+        mu = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g,
+                          state.mu, g32)
+        nu = jax.tree.map(lambda v, g: self.b2 * v + (1 - self.b2) * g * g,
+                          state.nu, g32)
+        bc1 = 1.0 - self.b1 ** t
+        bc2 = 1.0 - self.b2 ** t
+        lr = self._lr(step)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            u = -lr * (mhat / (jnp.sqrt(vhat) + self.eps)
+                       + self.weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype)
+
+        updates = jax.tree.map(upd, params, mu, nu)
+        return updates, OptState(mu=mu, nu=nu)

@@ -1,0 +1,4 @@
+from .sharding import param_sharding_rules, apply_sharding_rules, batch_sharding  # noqa: F401
+from .compression import bf16_compress, int8_compress, CompressedAllReduce  # noqa: F401
+from .straggler import StragglerMonitor  # noqa: F401
+from .elastic import reshard_state  # noqa: F401

@@ -1,0 +1,99 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+``CompressedAllReduce`` wraps the data-parallel gradient reduction:
+gradients are compressed (bf16 or int8 with per-tensor scale), all-reduced in
+the compressed domain, and the quantization error is fed back into the next
+step's gradients (error-feedback accumulators make the compression unbiased
+over time — Seide et al.'14 / Karimireddy et al.'19 style).
+
+At 512+ chips the DP all-reduce of a 9B-param fp32 gradient is 36 GB/step;
+int8 cuts wire bytes 4× at the cost of one fp32 residual buffer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def bf16_compress(g):
+    return g.astype(jnp.bfloat16)
+
+
+def bf16_decompress(c):
+    return c.astype(jnp.float32)
+
+
+def int8_compress(g):
+    """Per-tensor symmetric int8. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(g)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressedAllReduce:
+    """mode: "none" | "bf16" | "int8". Use inside shard_map/pmean context via
+    ``reduce(grads, axis_names)`` or standalone for error-feedback compression
+    with ``compress_ef``."""
+
+    mode: str = "bf16"
+
+    def init_error(self, params) -> Any:
+        if self.mode == "none":
+            return None
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def compress_ef(self, grads, error):
+        """Error-feedback compression: returns (decompressed-compressed
+        grads, new_error).  The wire format is what an all-reduce would
+        carry."""
+        if self.mode == "none":
+            return grads, error
+
+        def one(g, e):
+            g32 = g.astype(jnp.float32) + e
+            if self.mode == "bf16":
+                c = bf16_compress(g32)
+                d = bf16_decompress(c)
+            else:
+                q, s = int8_compress(g32)
+                d = int8_decompress(q, s)
+            return d, g32 - d
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_e = jax.tree.leaves(error)
+        outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        dec = jax.tree.unflatten(tdef, [o[0] for o in outs])
+        err = jax.tree.unflatten(tdef, [o[1] for o in outs])
+        return dec, err
+
+    def reduce(self, grads, axis_names):
+        """psum-mean of compressed gradients (inside shard_map)."""
+        if self.mode == "none":
+            return jax.lax.pmean(grads, axis_names)
+        if self.mode == "bf16":
+            c = jax.tree.map(bf16_compress, grads)
+            r = jax.lax.pmean(c, axis_names)
+            return jax.tree.map(bf16_decompress, r)
+        # int8: reduce in int32 to avoid overflow, rescale by max scale
+        def one(g):
+            q, s = int8_compress(g)
+            qsum = jax.lax.psum(q.astype(jnp.int32), axis_names)
+            smax = jax.lax.pmax(s, axis_names)
+            n = jax.lax.psum(1, axis_names)
+            return qsum.astype(jnp.float32) * smax / n
+
+        return jax.tree.map(one, grads)
+
+    def wire_bytes(self, params) -> int:
+        per = {"none": 4, "bf16": 2, "int8": 1}[self.mode]
+        return sum(int(p.size) * per for p in jax.tree.leaves(params))

@@ -1,0 +1,34 @@
+"""Elastic scaling: reshard a training state onto a different mesh.
+
+Checkpoints store logical (global) arrays (see checkpoint.py), so growing or
+shrinking the pod allocation is: build the new mesh → recompute sharding
+rules → device_put.  This file provides the in-memory path (no disk round
+trip) used when an allocation changes under a live job.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from .sharding import apply_sharding_rules
+
+
+def reshard_state(state: Any, new_mesh, *, fsdp: bool = False,
+                  params_only: bool = False) -> Any:
+    """state = (params, opt_state, step) or any pytree of arrays.  Gathers to
+    host only when necessary (same-topology fast path is a device_put)."""
+    if params_only:
+        shardings = apply_sharding_rules(state, new_mesh, fsdp=fsdp)
+        return jax.device_put(state, shardings)
+    params, opt_state, step = state
+    pshard = apply_sharding_rules(params, new_mesh, fsdp=fsdp)
+    new_params = jax.device_put(params, pshard)
+    # Adam moments shard exactly like their parameters
+    mshard = jax.tree.map(lambda s: s, pshard)
+    new_opt = type(opt_state)(
+        mu=jax.device_put(opt_state.mu, mshard),
+        nu=jax.device_put(opt_state.nu, mshard),
+    )
+    return new_params, new_opt, step

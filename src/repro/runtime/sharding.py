@@ -1,0 +1,116 @@
+"""Parameter/batch sharding rules (t5x-style path-pattern rules).
+
+Training layout: DP over ("pod","data"), TP over "model", optional
+FSDP-style extra sharding of the big matrices' non-TP axis over "data".
+
+Rules are matched on the flattened parameter path (e.g.
+"slots/0/attn/wq"); first match wins.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, List, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def param_sharding_rules(mesh: Mesh, *, fsdp: bool = False) -> List[Tuple[str, P]]:
+    dp = "data" if "data" in mesh.axis_names else None
+    f = dp if fsdp else None
+    # NOTE: stacked layer params have a leading (n_periods,) axis -> specs
+    # below are prefixed with None at apply time for paths under "slots/".
+    return [
+        (r".*embed$", P("model", None)),  # (V, D) vocab-sharded
+        (r".*unembed$", P(None, "model")),  # (D, V)
+        (r".*attn/wq$", P(f, "model")),
+        # kv heads < tp for most GQA archs: replicate kv projections over
+        # "model" (MaxText-style kv replication) — the local head-repeat then
+        # shards the full q-head dim with no reshard roundtrip.
+        (r".*attn/wk$", P(f, None)),
+        (r".*attn/wv$", P(f, None)),
+        (r".*attn/wo$", P("model", f)),
+        (r".*q_norm$|.*k_norm$", P()),
+        (r".*(mlp|shared)/w_gate$", P(f, "model")),
+        (r".*(mlp|shared)/w_up$", P(f, "model")),
+        (r".*(mlp|shared)/w_down$", P("model", f)),
+        (r".*(mlp|shared)/w_in$", P(f, "model")),
+        (r".*(mlp|shared)/w_out$", P("model", f)),
+        (r".*moe/router$", P(f, None)),
+        (r".*moe/w_gate$", P("model", f, None)),  # (E, D, F) expert-sharded
+        (r".*moe/w_up$", P("model", f, None)),
+        (r".*moe/w_down$", P("model", f, None)),
+        (r".*ssm/in_proj$", P(f, "model")),
+        (r".*ssm/out_proj$", P("model", f)),
+        (r".*ssm/conv_w$", P(None, "model")),
+        (r".*ssm/conv_b$", P("model")),
+        (r".*ssm/norm$", P("model")),
+        (r".*", P()),  # norms, scalars: replicated
+    ]
+
+
+def _spec_for(path: str, rules, stacked: bool) -> P:
+    for pat, spec in rules:
+        if re.match(pat, path):
+            if stacked:
+                return P(None, *spec)
+            return spec
+    return P()
+
+
+def apply_sharding_rules(params: Any, mesh: Mesh, *, fsdp: bool = False) -> Any:
+    """Returns a pytree of NamedSharding matching ``params``."""
+    rules = param_sharding_rules(mesh, fsdp=fsdp)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                       for p in path)
+        stacked = key.startswith("slots/")
+        spec = _spec_for(key, rules, stacked)
+        # drop axes that don't divide the dim (e.g. tiny reduced configs)
+        clean = []
+        for i, ax in enumerate(spec):
+            if ax is None:
+                clean.append(None)
+                continue
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if i < leaf.ndim and leaf.shape[i] % size == 0:
+                clean.append(ax)
+            else:
+                clean.append(None)
+        out.append(NamedSharding(mesh, P(*clean)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_sharding(mesh: Mesh, batch_size: int | None = None) -> NamedSharding:
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if batch_size is not None:
+        n = 1
+        for a in dp_axes:
+            n *= mesh.shape[a]
+        if batch_size % n != 0:
+            return NamedSharding(mesh, P())  # e.g. long_500k batch=1
+    return NamedSharding(mesh, P(dp_axes))
+
+
+def cache_sharding(mesh: Mesh, caches: Any, *, seq_sharded: bool) -> Any:
+    """KV caches: (period, B, S, H, D) — batch over dp axes and, for long
+    contexts, S over 'model' (split-KV decode)."""
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def spec(leaf):
+        n_dp = 1
+        for a in dp_axes:
+            n_dp *= mesh.shape[a]
+        bdim = leaf.shape[1] if leaf.ndim > 1 else 1
+        bspec = dp_axes if bdim % n_dp == 0 else None
+        if leaf.ndim >= 3 and seq_sharded and leaf.shape[2] % mesh.shape.get("model", 1) == 0:
+            return NamedSharding(mesh, P(None, bspec, "model"))
+        return NamedSharding(mesh, P(None, bspec))
+
+    return jax.tree.map(spec, caches)

@@ -1,0 +1,50 @@
+"""X-drop alignment semantics (the jnp oracle itself)."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.assembly.alignment import extend_pair, xdrop_extend
+from repro.assembly.kmers import encode_seq
+
+
+def _ext(a, b, **kw):
+    ac = jnp.asarray(np.asarray(encode_seq(a)))
+    bc = jnp.asarray(np.asarray(encode_seq(b)))
+    return xdrop_extend(
+        ac, 0, 1, len(a), bc, 0, 1, len(b),
+        **{"band": 17, "max_steps": 128, **kw},
+    )
+
+
+def test_perfect_match():
+    e = _ext("ACGTACGTAC", "ACGTACGTAC")
+    assert int(e.score) == 10 and int(e.ai) == 10 and int(e.bj) == 10
+
+
+def test_mismatch_tail_dropped():
+    # first 8 match, then garbage: x-drop stops, reports the matched prefix
+    e = _ext("ACGTACGT" + "AAAA", "ACGTACGT" + "TTTT", xdrop=3)
+    assert int(e.score) == 8 and int(e.ai) == 8
+
+
+def test_single_gap_recovered():
+    a = "ACGTACGTACGT"
+    b = "ACGTACGACGT" + "A"  # deletion of one T
+    e = _ext(a, b, xdrop=10)
+    assert int(e.score) >= 8  # 11 matches − gap penalties
+
+
+def test_seed_extension_coordinates():
+    genome = "ACGTTGCAAGGCTTACCGGATTACGCAT"
+    a = genome[2:20]
+    b = genome[8:28]
+    # shared 6-mer at a[6:12] == b[0:6]
+    al = extend_pair(
+        jnp.asarray(np.asarray(encode_seq(a))), len(a),
+        jnp.asarray(np.asarray(encode_seq(b))), len(b),
+        jnp.int32(6), jnp.int32(0), k=6, band=17, max_steps=128,
+    )
+    # overlap spans a[6:18] vs b[0:12]: 12 exact matches (6 seed + 6 ext)
+    assert int(al.score) == len(a) - 6
+    assert int(al.bi) == 6 and int(al.ei) == len(a)
+    assert int(al.bj) == 0 and int(al.ej) == len(a) - 6

@@ -1,0 +1,36 @@
+"""Bloom filter: no false negatives (the invariant that matters)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.assembly.bloom import BloomFilter
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2**30 - 1), st.integers(0, 2**30 - 1)),
+                min_size=1, max_size=100))
+def test_no_false_negatives(items):
+    bf = BloomFilter.create(4096, n_hashes=3)
+    hi = jnp.asarray([x[0] for x in items], jnp.int32)
+    lo = jnp.asarray([x[1] for x in items], jnp.int32)
+    bf = bf.insert(hi, lo, jnp.ones(len(items), bool))
+    assert bool(jnp.all(bf.query(hi, lo)))
+
+
+def test_false_positive_rate_sane(rng):
+    bf = BloomFilter.create(1 << 14, n_hashes=3)
+    n = 500
+    hi = jnp.asarray(rng.integers(0, 2**30, n), jnp.int32)
+    lo = jnp.asarray(rng.integers(0, 2**30, n), jnp.int32)
+    bf = bf.insert(hi, lo, jnp.ones(n, bool))
+    other_hi = jnp.asarray(rng.integers(0, 2**30, 2000), jnp.int32)
+    other_lo = jnp.asarray(rng.integers(0, 2**30, 2000) + 2**30, jnp.int32)
+    fp = float(jnp.mean(bf.query(other_hi, other_lo)))
+    assert fp < 0.15
+
+
+def test_invalid_not_inserted():
+    bf = BloomFilter.create(256, 2)
+    bf = bf.insert(jnp.asarray([5]), jnp.asarray([7]), jnp.asarray([False]))
+    assert not bool(bf.query(jnp.asarray([5]), jnp.asarray([7]))[0])

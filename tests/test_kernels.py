@@ -1,0 +1,58 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.minplus import minplus_matmul, minplus_matmul_ref
+from repro.kernels.xdrop import xdrop_extend_batch, xdrop_extend_batch_ref
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (8, 8, 8, 8, 8, 8),
+    (32, 16, 24, 16, 16, 16),
+    (65, 33, 47, 32, 32, 32),   # non-divisible → padding path
+    (128, 128, 128, 64, 64, 64),
+])
+def test_minplus_kernel_shapes(m, k, n, bm, bn, bk):
+    rng = np.random.default_rng(m * 1000 + n)
+    a = np.where(rng.random((m, k, 4)) < 0.35,
+                 rng.integers(1, 500, (m, k, 4)).astype(np.float32), np.inf)
+    b = np.where(rng.random((k, n, 4)) < 0.35,
+                 rng.integers(1, 500, (k, n, 4)).astype(np.float32), np.inf)
+    got = np.asarray(minplus_matmul(jnp.asarray(a), jnp.asarray(b),
+                                    block_m=bm, block_n=bn, block_k=bk))
+    ref = np.asarray(minplus_matmul_ref(jnp.asarray(a), jnp.asarray(b)))
+    assert np.array_equal(np.isinf(got), np.isinf(ref))
+    np.testing.assert_allclose(got[np.isfinite(got)], ref[np.isfinite(ref)])
+
+
+@pytest.mark.parametrize("e,la,lb,band,pairs_per_block", [
+    (4, 40, 40, 9, 2),
+    (17, 64, 80, 17, 8),
+    (9, 100, 60, 33, 4),
+])
+@pytest.mark.parametrize("direction", [1, -1])
+def test_xdrop_kernel_sweep(e, la, lb, band, pairs_per_block, direction):
+    rng = np.random.default_rng(e * 100 + la + direction)
+    a = rng.integers(0, 4, (e, la)).astype(np.uint8)
+    b = np.zeros((e, lb), np.uint8)
+    n = min(la, lb)
+    b[:, :n] = a[:, :n]
+    noise = rng.random((e, lb)) < 0.07
+    b = np.where(noise, (b + 1) % 4, b).astype(np.uint8)
+    if direction == 1:
+        base_a = np.zeros(e, np.int32); len_a = np.full(e, la, np.int32)
+        base_b = np.zeros(e, np.int32); len_b = np.full(e, lb, np.int32)
+    else:
+        base_a = np.full(e, la - 1, np.int32); len_a = np.full(e, la, np.int32)
+        base_b = np.full(e, lb - 1, np.int32); len_b = np.full(e, lb, np.int32)
+    step = np.full(e, direction, np.int32)
+    args = [jnp.asarray(x) for x in
+            (a, base_a, step, len_a, b, base_b, step, len_b)]
+    kw = dict(band=band, max_steps=la + lb)
+    s1, i1, j1 = xdrop_extend_batch(*args, pairs_per_block=pairs_per_block, **kw)
+    s2, i2, j2 = xdrop_extend_batch_ref(*args, **kw)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(j1), np.asarray(j2))

@@ -1,0 +1,79 @@
+"""K-mer encoding / canonicalization properties."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.assembly.kmers import (
+    decode_seq, encode_seq, extract_kmers, revcomp,
+)
+
+seqs = st.text(alphabet="ACGT", min_size=8, max_size=40)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seqs)
+def test_encode_decode_roundtrip(s):
+    assert decode_seq(encode_seq(s)) == s
+
+
+@settings(max_examples=40, deadline=None)
+@given(seqs)
+def test_revcomp_involution(s):
+    codes = encode_seq(s)[None, :]
+    lens = jnp.asarray([len(s)])
+    rc = revcomp(codes, lens)
+    rcrc = revcomp(rc, lens)
+    np.testing.assert_array_equal(np.asarray(rcrc), np.asarray(codes))
+
+
+def _py_canonical(s, k):
+    comp = {"A": "T", "C": "G", "G": "C", "T": "A"}
+    out = []
+    for i in range(len(s) - k + 1):
+        km = s[i : i + k]
+        rc = "".join(comp[c] for c in reversed(km))
+        out.append(min(km, rc))
+    return out
+
+
+@settings(max_examples=30, deadline=None)
+@given(seqs, st.sampled_from([5, 9, 15]))
+def test_extraction_matches_python(s, k):
+    if len(s) < k:
+        return
+    codes = encode_seq(s)[None, :]
+    km = extract_kmers(codes, jnp.asarray([len(s)]), k=k)
+    got = []
+    p = len(s) - k + 1
+    for i in range(p):
+        assert bool(km["valid"][0, i])
+        hi, lo = int(km["hi"][0, i]), int(km["lo"][0, i])
+        got.append((hi, lo))
+    ref = _py_canonical(s, k)
+    # same packed value ⇔ same canonical string; check ordering consistency
+    packed_ref = {}
+    for g, r in zip(got, ref):
+        packed_ref.setdefault(r, set()).add(g)
+    for r, gs in packed_ref.items():
+        assert len(gs) == 1, f"canonical {r} mapped to {gs}"
+    # strand bit: canonical == forward iff strand == 0
+    for i in range(p):
+        fwd = s[i : i + k]
+        assert (ref[i] == fwd) == (int(km["strand"][0, i]) == 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seqs, st.sampled_from([7, 15]))
+def test_canonical_invariant_under_rc(s, k):
+    """The canonical k-mer multiset of a read equals its RC's."""
+    if len(s) < k:
+        return
+    codes = encode_seq(s)[None, :]
+    lens = jnp.asarray([len(s)])
+    km1 = extract_kmers(codes, lens, k=k)
+    km2 = extract_kmers(revcomp(codes, lens), lens, k=k)
+    p = len(s) - k + 1
+    set1 = sorted((int(km1["hi"][0, i]), int(km1["lo"][0, i])) for i in range(p))
+    set2 = sorted((int(km2["hi"][0, i]), int(km2["lo"][0, i])) for i in range(p))
+    assert set1 == set2

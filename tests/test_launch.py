@@ -1,0 +1,73 @@
+"""Launch-layer units: HLO collective parser, roofline math, train resume."""
+
+import numpy as np
+
+from repro.launch.hlo_analysis import collective_bytes
+from repro.launch.roofline import RooflineTerms, model_flops, roofline_fraction
+
+
+HLO_SAMPLE = """
+ENTRY %main () -> f32[] {
+  %ag = f32[16,1024]{1,0} all-gather(%x), channel_id=1
+  %ar = bf16[8,8]{1,0} all-reduce(%y), metadata={op_name="jit(f)/while/body/foo"}
+  %cp-start = f32[4]{0} collective-permute-start(%z), channel_id=3
+  %cp-done = f32[4]{0} collective-permute-done(%cp-start)
+  %rs = f32[2,2]{1,0} reduce-scatter(%w), channel_id=4
+}
+"""
+
+
+def test_collective_parser():
+    r = collective_bytes(HLO_SAMPLE, default_loop_trips=10)
+    assert r["by_op"]["all-gather"] == 16 * 1024 * 4
+    assert r["by_op"]["all-reduce"] == 8 * 8 * 2 * 10  # inside while → ×10
+    assert r["by_op"]["collective-permute"] == 16  # -start counted, -done not
+    assert r["by_op"]["reduce-scatter"] == 16
+    assert r["static_bytes"] == 16 * 1024 * 4 + 128 + 16 + 16
+    assert r["total_bytes_tpu_estimate"] <= r["total_bytes"]
+
+
+def test_roofline_terms():
+    t = RooflineTerms(
+        arch="x", shape="train_4k", mesh="single", chips=256,
+        flops_per_device=197e12,  # exactly 1 second of compute
+        bytes_per_device=819e9,  # exactly 1 second of HBM
+        collective_bytes_per_device=50e9 * 4 * 2,  # 2 s of ICI
+        model_flops_global=197e12 * 256,
+    ).finalize()
+    assert abs(t.compute_s - 1.0) < 1e-9
+    assert abs(t.memory_s - 1.0) < 1e-9
+    assert abs(t.collective_s - 2.0) < 1e-9
+    assert t.bottleneck == "collective"
+    assert abs(roofline_fraction(t) - 0.5) < 1e-9
+
+
+def test_model_flops():
+    class C:
+        def active_param_count(self):
+            return 1_000_000
+
+    assert model_flops(C(), "train", 10, 2) == 6e6 * 20
+    assert model_flops(C(), "decode", 9999, 4) == 2e6 * 4
+
+
+def test_train_resume_determinism(tmp_path):
+    """Restart-from-checkpoint reproduces the uninterrupted run exactly
+    (deterministic data pipeline + checkpointed state)."""
+    from repro.launch.train import main
+
+    full = main([
+        "--arch", "qwen3-4b", "--reduced", "--steps", "8", "--batch", "4",
+        "--seq", "32", "--log-every", "100",
+    ])
+    part1 = main([
+        "--arch", "qwen3-4b", "--reduced", "--steps", "5", "--batch", "4",
+        "--seq", "32", "--ckpt-dir", str(tmp_path), "--ckpt-every", "5",
+        "--log-every", "100",
+    ])
+    part2 = main([
+        "--arch", "qwen3-4b", "--reduced", "--steps", "8", "--batch", "4",
+        "--seq", "32", "--ckpt-dir", str(tmp_path), "--resume",
+        "--log-every", "100",
+    ])
+    np.testing.assert_allclose(part2[-1], full[-1], rtol=1e-4)

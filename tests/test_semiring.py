@@ -1,0 +1,85 @@
+"""Semiring laws (property-based) — correctness of Algorithm 3's algebra."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.semiring import (
+    minplus_orient_semiring as SR,
+    overlap_semiring as OV,
+    mp_value,
+)
+
+
+def mp_vals(draw_inf=True):
+    elem = st.floats(1, 1e5) | (st.just(np.inf) if draw_inf else st.floats(1, 1e5))
+    return st.lists(elem, min_size=4, max_size=4).map(
+        lambda v: jnp.asarray(v, jnp.float32)
+    )
+
+
+@settings(max_examples=50, deadline=None)
+@given(mp_vals(), mp_vals(), mp_vals())
+def test_minplus_add_assoc_comm(a, b, c):
+    add = SR.add
+    x = add(add(a, b), c)
+    y = add(a, add(b, c))
+    np.testing.assert_allclose(np.asarray(x), np.asarray(y))
+    np.testing.assert_allclose(np.asarray(add(a, b)), np.asarray(add(b, a)))
+
+
+@settings(max_examples=50, deadline=None)
+@given(mp_vals(), mp_vals(), mp_vals())
+def test_minplus_mul_distributes_over_add(a, b, c):
+    # a ⊗ (b ⊕ c) == (a ⊗ b) ⊕ (a ⊗ c)  — required for SpGEMM correctness
+    lhs = SR.mul(a, SR.add(b, c))
+    rhs = SR.add(SR.mul(a, b), SR.mul(a, c))
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs))
+
+
+@settings(max_examples=50, deadline=None)
+@given(mp_vals(), mp_vals())
+def test_minplus_zero_absorbs(a, b):
+    zero = SR.zero(())
+    assert bool(SR.is_zero(SR.mul(a, zero)))
+    np.testing.assert_allclose(np.asarray(SR.add(a, zero)), np.asarray(a))
+
+
+def test_minplus_mul_is_oriented_2x2_matmul():
+    # edge i→k strands (0,1) suffix 5; edge k→j strands (1,0) suffix 7:
+    # consistent middle strand (1 == 1) → combo (0,0) value 12
+    a = mp_value(5.0, 0, 1)
+    b = mp_value(7.0, 1, 0)
+    out = np.asarray(SR.mul(a, b))
+    assert out[0] == 12.0 and np.isinf(out[1:]).all()
+    # inconsistent middle: k used in strand 1 by left, strand 0 expected
+    b2 = mp_value(7.0, 0, 0)
+    assert np.isinf(np.asarray(SR.mul(a, b2))).all()
+
+
+def test_overlap_semiring_counts_and_pairs():
+    a = {"pos": jnp.int32(10)}
+    b = {"pos": jnp.int32(20)}
+    one = OV.mul(a, b)
+    assert int(one["cnt"]) == 1
+    two = OV.add(one, OV.mul({"pos": jnp.int32(30)}, {"pos": jnp.int32(40)}))
+    assert int(two["cnt"]) == 2
+    assert two["apos"].tolist() == [10, 30]
+    three = OV.add(two, OV.mul({"pos": jnp.int32(50)}, {"pos": jnp.int32(60)}))
+    assert int(three["cnt"]) == 3
+    assert three["apos"].tolist() == [10, 30]  # capped at NUM_POS_PAIRS
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=6))
+def test_overlap_add_associative_in_count(posns):
+    vals = [OV.mul({"pos": jnp.int32(p)}, {"pos": jnp.int32(p + 1)})
+            for p in posns]
+    left = vals[0]
+    for v in vals[1:]:
+        left = OV.add(left, v)
+    right = vals[-1]
+    for v in reversed(vals[:-1]):
+        right = OV.add(v, right)
+    assert int(left["cnt"]) == int(right["cnt"]) == len(posns)
+    assert left["apos"].tolist() == right["apos"].tolist()

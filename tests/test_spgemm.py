@@ -1,0 +1,102 @@
+"""SpGEMM vs dense brute force (property-based) + masked/chunked variants."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.semiring import (
+    count_semiring as CS,
+    minplus_orient_semiring as SR,
+)
+from repro.core.spmat import from_coo
+from repro.core.spgemm import spgemm, spgemm_masked, transpose
+from repro.core.myers_baseline import from_ell, graphs_equal
+from repro.kernels.minplus.ref import minplus_matmul_ref
+
+
+def _rand_count_mat(rng, n, m, density, cap):
+    mask = rng.random((n, m)) < density
+    vals = rng.integers(1, 4, (n, m)) * mask
+    rows, cols = np.nonzero(mask)
+    mat, ovf = from_coo(
+        jnp.asarray(rows), jnp.asarray(cols),
+        jnp.asarray(vals[rows, cols], jnp.int32),
+        jnp.ones(len(rows), bool), n_rows=n, n_cols=m, capacity=cap,
+        semiring=CS,
+    )
+    assert int(ovf) == 0
+    return mat, vals
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_spgemm_count_semiring_matches_dense(seed):
+    rng = np.random.default_rng(seed)
+    a, da = _rand_count_mat(rng, 12, 9, 0.3, 9)
+    b, db = _rand_count_mat(rng, 9, 11, 0.3, 11)
+    c, ovf = spgemm(a, b, semiring=CS, capacity=11)
+    assert int(ovf) == 0
+    np.testing.assert_array_equal(np.asarray(c.to_dense(CS)), da @ db)
+
+
+def _rand_mp_mat(rng, n, density, cap):
+    e = int(n * n * density)
+    rows = rng.integers(0, n, e)
+    cols = rng.integers(0, n, e)
+    combos = rng.integers(0, 4, e)
+    suf = rng.integers(1, 100, e).astype(np.float32)
+    vals = np.full((e, 4), np.inf, np.float32)
+    vals[np.arange(e), combos] = suf
+    ok = rows != cols
+    mat, _ = from_coo(
+        jnp.asarray(rows), jnp.asarray(cols), jnp.asarray(vals),
+        jnp.asarray(ok), n_rows=n, n_cols=n, capacity=cap, semiring=SR,
+    )
+    return mat
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_spgemm_minplus_matches_dense_kernel_ref(seed):
+    rng = np.random.default_rng(seed)
+    r = _rand_mp_mat(rng, 14, 0.25, 14)
+    n_sp, ovf = spgemm(r, r, semiring=SR, capacity=14 * 14)
+    dense_r = np.asarray(r.to_dense(SR))
+    dense_n = np.asarray(
+        minplus_matmul_ref(jnp.asarray(dense_r), jnp.asarray(dense_r))
+    )
+    got = np.asarray(n_sp.to_dense(SR))
+    np.testing.assert_allclose(got, dense_n)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_masked_equals_full_at_mask(seed):
+    rng = np.random.default_rng(seed)
+    r = _rand_mp_mat(rng, 14, 0.25, 14)
+    full, _ = spgemm(r, r, semiring=SR, capacity=14 * 14)
+    msk = spgemm_masked(r, r, r, semiring=SR)
+    at_r, found = full.lookup(SR, r.cols)
+    m_mask = np.asarray(r.mask)
+    np.testing.assert_allclose(
+        np.asarray(msk.vals)[m_mask],
+        np.where(np.asarray(found)[m_mask][:, None],
+                 np.asarray(at_r)[m_mask], np.inf),
+    )
+
+
+def test_transpose_roundtrip(rng):
+    a, da = _rand_count_mat(rng, 10, 8, 0.3, 8)
+    at, ovf = transpose(a, capacity=10, semiring=CS)
+    assert int(ovf) == 0
+    np.testing.assert_array_equal(np.asarray(at.to_dense(CS)), da.T)
+
+
+def test_row_chunked_equivalence(rng):
+    r = _rand_mp_mat(rng, 30, 0.2, 20)
+    c1, _ = spgemm(r, r, semiring=SR, capacity=40)
+    c2, _ = spgemm(r, r, semiring=SR, capacity=40, row_chunk=7)
+    assert graphs_equal(from_ell(c1), from_ell(c2))
+    m1 = spgemm_masked(r, r, r, semiring=SR)
+    m2 = spgemm_masked(r, r, r, semiring=SR, row_chunk=11)
+    assert graphs_equal(from_ell(m1), from_ell(m2))

@@ -1,0 +1,69 @@
+"""EllMatrix construction / merge / prune invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.semiring import count_semiring as CS
+from repro.core.spmat import EllMatrix, from_coo, prune
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(
+        st.tuples(st.integers(0, 7), st.integers(0, 9), st.integers(1, 5)),
+        min_size=1, max_size=60,
+    )
+)
+def test_from_coo_matches_dense_accumulation(triples):
+    rows = jnp.asarray([t[0] for t in triples])
+    cols = jnp.asarray([t[1] for t in triples])
+    vals = jnp.asarray([t[2] for t in triples], jnp.int32)
+    ok = jnp.ones(len(triples), bool)
+    m, ovf = from_coo(rows, cols, vals, ok, n_rows=8, n_cols=10,
+                      capacity=10, semiring=CS)
+    assert int(ovf) == 0
+    dense = np.zeros((8, 10), np.int64)
+    for r, c, v in triples:
+        dense[r, c] += v
+    got = np.asarray(m.to_dense(CS))
+    np.testing.assert_array_equal(got, dense)
+    # rows sorted by col, invalid at the end
+    cols_np = np.asarray(m.cols)
+    for r in range(8):
+        valid = cols_np[r][cols_np[r] >= 0]
+        assert (np.diff(valid) > 0).all()
+        assert (cols_np[r][len(valid):] == -1).all()
+
+
+def test_overflow_counted_not_dropped_silently():
+    rows = jnp.zeros(10, jnp.int32)
+    cols = jnp.arange(10)
+    vals = jnp.ones(10, jnp.int32)
+    m, ovf = from_coo(rows, cols, vals, jnp.ones(10, bool), n_rows=2,
+                      n_cols=16, capacity=4, semiring=CS)
+    assert int(ovf) == 6
+    assert m.cols[0].tolist() == [0, 1, 2, 3]
+
+
+def test_prune_recompacts():
+    rows = jnp.asarray([0, 0, 0])
+    cols = jnp.asarray([2, 5, 7])
+    vals = jnp.asarray([1, 2, 3], jnp.int32)
+    m, _ = from_coo(rows, cols, vals, jnp.ones(3, bool), n_rows=1, n_cols=8,
+                    capacity=4, semiring=CS)
+    drop = jnp.asarray([[False, True, False, False]])
+    m2 = prune(m, drop, CS)
+    assert m2.cols[0].tolist() == [2, 7, -1, -1]
+    assert m2.vals[0].tolist()[:2] == [1, 3]
+
+
+def test_lookup():
+    rows = jnp.asarray([0, 0, 1])
+    cols = jnp.asarray([2, 5, 3])
+    vals = jnp.asarray([10, 20, 30], jnp.int32)
+    m, _ = from_coo(rows, cols, vals, jnp.ones(3, bool), n_rows=2, n_cols=8,
+                    capacity=4, semiring=CS)
+    got, found = m.lookup(CS, jnp.asarray([[5, 2, 7], [3, -1, 0]]))
+    assert found.tolist() == [[True, True, False], [True, False, False]]
+    assert got.tolist()[0][:2] == [20, 10]

@@ -1,0 +1,68 @@
+"""Overlap classification and bidirected graph construction."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.string_graph import (
+    build_overlap_graph, classify_overlaps, drop_contained,
+)
+from repro.core.myers_baseline import from_ell
+
+
+def _cls(bi, ei, li, bj, ej, lj, s, fuzz=3):
+    arr = lambda x: jnp.asarray([x], jnp.int32)
+    return classify_overlaps(
+        arr(bi), arr(ei), arr(li), arr(bj), arr(ej), arr(lj), arr(s),
+        end_fuzz=fuzz,
+    )
+
+
+def test_suffix_prefix_dovetail():
+    c = _cls(40, 100, 100, 0, 60, 90, 0)
+    assert bool(c.fwd_ij[0]) and not bool(c.fwd_ji[0])
+    assert int(c.suf_ij[0]) == 30  # lj - ej
+    assert int(c.suf_ij_comp[0]) == 40  # bi
+    assert c.strands_ij[0].tolist() == [0, 0]
+
+
+def test_prefix_suffix_dovetail():
+    c = _cls(0, 60, 100, 30, 90, 90, 1)
+    assert bool(c.fwd_ji[0]) and not bool(c.fwd_ij[0])
+    assert int(c.suf_ji[0]) == 40  # li - ei
+    assert c.strands_ji[0].tolist() == [1, 0]
+
+
+def test_contained_detected():
+    c = _cls(2, 98, 100, 20, 116, 200, 0)
+    assert bool(c.contained_i[0]) and not bool(c.contained_j[0])
+    assert not bool(c.fwd_ij[0]) and not bool(c.fwd_ji[0])
+
+
+def test_internal_match_dropped():
+    c = _cls(20, 60, 100, 30, 70, 120, 0)
+    assert not bool(c.fwd_ij[0]) and not bool(c.fwd_ji[0])
+
+
+def test_graph_has_complement_edges():
+    c = _cls(40, 100, 100, 0, 60, 90, 1)
+    r, contained, ovf = build_overlap_graph(
+        jnp.asarray([0]), jnp.asarray([1]), c, jnp.asarray([True]),
+        n_reads=2, capacity=4,
+    )
+    edges = from_ell(r)
+    assert (0, 1) in edges and (1, 0) in edges
+    # i→j at (0, s=1): combo 1; complement j→i at (1−1, 1−0) = (0, 1): combo 1
+    assert np.isfinite(edges[(0, 1)][1])
+    assert np.isfinite(edges[(1, 0)][1])
+    assert edges[(0, 1)][1] == 30.0  # overhang of oriented j
+    assert edges[(1, 0)][1] == 40.0  # overhang of i on reverse walk
+
+
+def test_drop_contained_removes_incident_edges():
+    c = _cls(40, 100, 100, 0, 60, 90, 0)
+    r, _, _ = build_overlap_graph(
+        jnp.asarray([0]), jnp.asarray([1]), c, jnp.asarray([True]),
+        n_reads=3, capacity=4,
+    )
+    r2 = drop_contained(r, jnp.asarray([False, True, False]))
+    assert int(r2.nnz()) == 0

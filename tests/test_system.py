@@ -1,0 +1,76 @@
+"""End-to-end behaviour tests: the full Algorithm-1 pipeline on simulated
+genomes (the paper's system-level claims at laptop scale)."""
+
+import numpy as np
+import pytest
+
+from repro.assembly.pipeline import PipelineConfig, assemble
+from repro.assembly.simulate import simulate_genome, simulate_reads
+
+
+@pytest.fixture(scope="module")
+def small_result():
+    rng = np.random.default_rng(7)
+    g = simulate_genome(rng, 8000)
+    rs = simulate_reads(g, depth=12, mean_len=900, std_len=120,
+                        error_rate=0.03, seed=11)
+    cfg = PipelineConfig(
+        m_capacity=1 << 15, upper=48, read_capacity=128,
+        overlap_capacity=48, r_capacity=32, align_chunk=8192,
+        band=33, max_steps=2048, xdrop=25,
+    )
+    return g, rs, assemble(rs.codes, rs.lengths, cfg)
+
+
+def test_assembles_single_contig(small_result):
+    g, rs, res = small_result
+    stats = res.stats["contigs"]
+    assert stats["n_contigs"] <= 3
+    assert abs(stats["longest"] - len(g)) < 0.05 * len(g)
+
+
+def test_sparsity_statistics_match_paper_model(small_result):
+    """Ellis et al.: c ≈ 2d for a perfect overlapper (paper §V-C)."""
+    g, rs, res = small_result
+    d = rs.depth
+    c = res.stats["c_density"]
+    assert 1.0 * d < c < 4.0 * d
+    # r ≤ c (alignment prunes candidates)
+    assert res.stats["r_density"] <= c
+
+
+def test_tr_converges_quickly(small_result):
+    """Paper §V-D: 'the number of iterations is often a small constant'."""
+    _, _, res = small_result
+    assert res.stats["tr_iterations"] <= 4
+    assert res.stats["nnz_S"] < res.stats["nnz_R"]
+
+
+def test_string_graph_mostly_linear(small_result):
+    """After TR of a linear genome, surviving degree ≈ 2 per strand-state."""
+    _, _, res = small_result
+    n_active = res.stats["n_reads"] - res.stats["n_contained"]
+    assert res.stats["s_density"] <= 4.0
+
+
+def test_contig_sequence_matches_genome(small_result):
+    g, rs, res = small_result
+    longest = max(res.contigs, key=lambda c: c.length)
+    contig = longest.codes
+    # exact subsequence check is too strict with 3% errors; check k-mer
+    # recall instead.  The contig is a concatenation of raw (error-bearing)
+    # reads — no consensus step — so exact-15-mer survival is bounded by
+    # (1−e)^15 ≈ 0.63 at e=3%; genome set sampled at stride 1 so offsets
+    # align, contig at stride 3.
+    k = 15
+
+    def kmers(x, stride):
+        return {tuple(x[i : i + k]) for i in range(0, len(x) - k + 1, stride)}
+
+    def rc(x):
+        return (3 - x)[::-1]
+
+    gk = kmers(g, 1) | kmers(rc(g), 1)
+    ck = kmers(contig, 3)
+    recall = len(ck & gk) / max(1, len(ck))
+    assert recall > 0.45, f"contig k-mer recall {recall:.3f}"

@@ -1,0 +1,114 @@
+"""Algorithm 2 vs the sequential Myers oracle + structural properties."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.semiring import minplus_orient_semiring as SR
+from repro.core.spmat import from_coo
+from repro.core.myers_baseline import (
+    dense_square_transitive_reduction,
+    from_ell,
+    graphs_equal,
+    myers_transitive_reduction,
+)
+from repro.core.transitive_reduction import (
+    transitive_reduction,
+    transitive_reduction_fused,
+)
+
+
+def _rand_graph(seed, n=20, e=80, symmetric=True):
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, n, e)
+    cols = rng.integers(0, n, e)
+    combos = rng.integers(0, 4, e)
+    suf = rng.integers(1, 200, e).astype(np.float32)
+    if symmetric:
+        # complement edges (paper §II: both strands walkable)
+        r2 = cols.copy(); c2 = rows.copy()
+        cb2 = 2 * (1 - combos % 2) + (1 - combos // 2)
+        s2 = rng.integers(1, 200, e).astype(np.float32)
+        rows = np.concatenate([rows, r2]); cols = np.concatenate([cols, c2])
+        combos = np.concatenate([combos, cb2]); suf = np.concatenate([suf, s2])
+    ok = rows != cols
+    e2 = len(rows)
+    vals = np.full((e2, 4), np.inf, np.float32)
+    vals[np.arange(e2), combos] = suf
+    mat, _ = from_coo(
+        jnp.asarray(rows), jnp.asarray(cols), jnp.asarray(vals),
+        jnp.asarray(ok), n_rows=n, n_cols=n, capacity=2 * e // n + 8,
+        semiring=SR,
+    )
+    return mat, n
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([20.0, 100.0]))
+def test_tr_matches_myers_oracle(seed, fuzz):
+    r, n = _rand_graph(seed)
+    s, stats = transitive_reduction(r, fuzz=fuzz, n_capacity=r.capacity ** 2)
+    oracle, _ = myers_transitive_reduction(from_ell(r), fuzz=fuzz)
+    assert graphs_equal(from_ell(s), oracle)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_fused_equals_faithful(seed):
+    r, n = _rand_graph(seed)
+    s1, _ = transitive_reduction(r, fuzz=50.0, n_capacity=r.capacity ** 2)
+    s2, _ = transitive_reduction_fused(r, fuzz=50.0)
+    assert graphs_equal(from_ell(s1), from_ell(s2))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_dense_square_baseline_agrees(seed):
+    r, n = _rand_graph(seed, n=14, e=40)
+    s, _ = transitive_reduction(r, fuzz=50.0, n_capacity=r.capacity ** 2)
+    dense, _ = dense_square_transitive_reduction(from_ell(r), n, fuzz=50.0)
+    assert graphs_equal(from_ell(s), dense)
+
+
+def test_chain_graph_is_fixed_point():
+    # a linear chain has no transitive edges: TR must not remove anything
+    n = 10
+    rows, cols, vals = [], [], []
+    for i in range(n - 1):
+        rows += [i, i + 1]
+        cols += [i + 1, i]
+        v1 = np.full(4, np.inf, np.float32); v1[0] = 50
+        v2 = np.full(4, np.inf, np.float32); v2[3] = 50
+        vals += [v1, v2]
+    mat, _ = from_coo(
+        jnp.asarray(rows), jnp.asarray(cols), jnp.asarray(np.stack(vals)),
+        jnp.ones(len(rows), bool), n_rows=n, n_cols=n, capacity=4,
+        semiring=SR,
+    )
+    s, stats = transitive_reduction_fused(mat, fuzz=10.0)
+    assert int(s.nnz()) == int(mat.nnz())
+
+
+def test_triangle_removes_long_edge():
+    # 0→1 (5), 1→2 (7), 0→2 (12): 0→2 is transitive
+    def mp(s_, a, b):
+        v = np.full(4, np.inf, np.float32); v[2 * a + b] = s_; return v
+    rows = jnp.asarray([0, 1, 0]); cols = jnp.asarray([1, 2, 2])
+    vals = jnp.asarray(np.stack([mp(5, 0, 0), mp(7, 0, 0), mp(12, 0, 0)]))
+    mat, _ = from_coo(rows, cols, vals, jnp.ones(3, bool), n_rows=3,
+                      n_cols=3, capacity=4, semiring=SR)
+    s, stats = transitive_reduction_fused(mat, fuzz=1.0)
+    assert int(s.nnz()) == 2
+    assert from_ell(s).keys() == {(0, 1), (1, 2)}
+
+
+def test_orientation_blocks_reduction():
+    # middle-node strands inconsistent: 0→2 must SURVIVE
+    def mp(s_, a, b):
+        v = np.full(4, np.inf, np.float32); v[2 * a + b] = s_; return v
+    rows = jnp.asarray([0, 1, 0]); cols = jnp.asarray([1, 2, 2])
+    vals = jnp.asarray(np.stack([mp(5, 0, 0), mp(7, 1, 0), mp(12, 0, 0)]))
+    mat, _ = from_coo(rows, cols, vals, jnp.ones(3, bool), n_rows=3,
+                      n_cols=3, capacity=4, semiring=SR)
+    s, _ = transitive_reduction_fused(mat, fuzz=1.0)
+    assert (0, 2) in from_ell(s)
