@@ -1,12 +1,18 @@
 """Fig. 5-8 analogue: per-stage runtime breakdown of the pipeline
-(CountKmer / CreateSpMat / SpGEMM / Alignment / BuildR / TrReduction)."""
+(CountKmer / CreateSpMat / SpGEMM / Alignment / BuildR / TrReduction),
+with a backend axis: the reference row set uses the jnp oracles, the pallas
+row set routes the hot ops (x-drop extension, min-plus squares) through the
+Pallas kernels via the dispatch layer (compiled on TPU, interpret elsewhere).
+
+Standalone: ``python -m benchmarks.bench_breakdown --backend pallas``.
+"""
 
 from __future__ import annotations
 
 import numpy as np
 
 
-def run():
+def run(backends=("reference", "pallas")):
     from repro.assembly.pipeline import PipelineConfig, assemble
     from repro.assembly.simulate import simulate_genome, simulate_reads
 
@@ -14,12 +20,36 @@ def run():
     g = simulate_genome(rng, 10_000)
     rs = simulate_reads(g, depth=12, mean_len=900, std_len=120,
                         error_rate=0.03, seed=10)
-    cfg = PipelineConfig(m_capacity=1 << 16, upper=48, read_capacity=128,
-                         overlap_capacity=48, r_capacity=32, band=33,
-                         max_steps=2048, align_chunk=8192)
-    res = assemble(rs.codes, rs.lengths, cfg)
-    total = sum(res.timings.values())
-    return [
-        (f"breakdown/{k}", v * 1e6, f"frac={v / total:.3f}")
-        for k, v in res.timings.items()
-    ]
+    rows = []
+    for backend in backends:
+        cfg = PipelineConfig(m_capacity=1 << 16, upper=48, read_capacity=128,
+                             overlap_capacity=48, r_capacity=32, band=33,
+                             max_steps=2048, align_chunk=8192, backend=backend)
+        res = assemble(rs.codes, rs.lengths, cfg)
+        total = sum(res.timings.values())
+        live = res.stats["n_aligned"]
+        cand = res.stats["align_candidates"]
+        rows.extend(
+            (f"breakdown[{backend}]/{k}", v * 1e6,
+             f"frac={v / total:.3f};live_pairs={live}/{cand}")
+            for k, v in res.timings.items()
+        )
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--backend", default="both",
+                   choices=["reference", "pallas", "both"])
+    ns = p.parse_args()
+    backends = (("reference", "pallas") if ns.backend == "both"
+                else (ns.backend,))
+    print("name,us_per_call,derived")
+    for name, us, derived in run(backends=backends):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,14 @@
-"""Kernel-level microbenchmarks: ELL SpGEMM vs dense min-plus reference
-(algorithmic win of sparsity) and the x-drop aligner oracle throughput."""
+"""Kernel-level microbenchmarks with a backend axis.
+
+Rows:
+  * ELL SpGEMM vs dense min-plus reference (algorithmic win of sparsity);
+  * ``minplus_dense`` and ``xdrop_extend`` timed through the backend dispatch
+    layer for each requested backend, so the reference-vs-Pallas speedup is
+    measured rather than asserted.  On non-TPU hosts the Pallas backend runs
+    in interpret mode — parity still exercised, no speedup expected.
+
+Standalone: ``python -m benchmarks.bench_kernels --backend both``.
+"""
 
 from __future__ import annotations
 
@@ -10,15 +19,36 @@ import jax
 import jax.numpy as jnp
 
 
-def run():
+def _time_us(f, *, warmup: int = 1, iters: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(f())
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(f())
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _resolve_backends(backend: str):
+    from repro.core.backend import resolve_backend
+
+    if backend == "both":
+        return ("reference", "pallas")
+    return (resolve_backend(backend),)
+
+
+def run(backend: str = "both"):
+    from repro.core.backend import dispatch, resolve_interpret
     from repro.core.semiring import minplus_orient_semiring as SR
     from repro.core.spmat import from_coo
     from repro.core.spgemm import spgemm
-    from repro.kernels.minplus.ref import minplus_matmul_ref
+    from repro.assembly.alignment import batch_extend
 
+    backends = _resolve_backends(backend)
     rows = []
-    n, deg = 1024, 8
     rng = np.random.default_rng(0)
+
+    # --- ELL SpGEMM vs dense reference (sparsity win) ---
+    n, deg = 1024, 8
     e = n * deg
     r_ = rng.integers(0, n, e); c_ = rng.integers(0, n, e)
     combos = rng.integers(0, 4, e)
@@ -27,37 +57,63 @@ def run():
     mat, _ = from_coo(jnp.asarray(r_), jnp.asarray(c_), jnp.asarray(vals),
                       jnp.asarray(r_ != c_), n_rows=n, n_cols=n,
                       capacity=3 * deg, semiring=SR)
-
-    f_sp = jax.jit(lambda: spgemm(mat, mat, semiring=SR, capacity=64)[0].cols)
-    f_sp().block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(3):
-        f_sp().block_until_ready()
-    t_sp = (time.perf_counter() - t0) / 3 * 1e6
-
+    t_sp = _time_us(
+        jax.jit(lambda: spgemm(mat, mat, semiring=SR, capacity=64)[0].cols)
+    )
+    dense_ref = dispatch("minplus_dense", "reference")
     dense = mat.to_dense(SR)
-    f_d = jax.jit(lambda: minplus_matmul_ref(dense, dense))
-    f_d().block_until_ready()
-    t0 = time.perf_counter()
-    f_d().block_until_ready()
-    t_d = (time.perf_counter() - t0) * 1e6
+    t_d = _time_us(jax.jit(lambda: dense_ref(dense, dense)), iters=1)
     rows.append(("kernels/ell_spgemm_minplus_n1024", t_sp,
                  f"dense_ref={t_d:.0f}us;sparse_speedup={t_d / t_sp:.1f}x"))
 
-    from repro.assembly.alignment import batch_extend
+    # --- minplus_dense backend axis ---
+    m = 256
+    a = jnp.asarray(np.where(rng.random((m, m, 4)) < 0.35,
+                             rng.integers(1, 500, (m, m, 4)), np.inf),
+                    jnp.float32)
+    mp_times = {}
+    for be in backends:
+        f = dispatch("minplus_dense", be)
+        mp_times[be] = _time_us(jax.jit(lambda f=f: f(a, a)))
+        mode = ("interpret" if be == "pallas" and resolve_interpret("auto")
+                else "compiled")
+        rows.append((f"kernels/minplus_dense_{m}[{be}]", mp_times[be],
+                     f"mode={mode}"))
+    if len(mp_times) == 2:
+        rows.append(("kernels/minplus_dense_speedup", 0.0,
+                     f"ref/pallas={mp_times['reference'] / mp_times['pallas']:.2f}x"))
 
-    e2, l = 256, 800
-    a = rng.integers(0, 4, (e2, l)).astype(np.uint8)
-    b = np.where(rng.random((e2, l)) < 0.05, (a + 1) % 4, a).astype(np.uint8)
-    f_al = jax.jit(lambda: batch_extend(
-        jnp.asarray(a), jnp.full(e2, l), jnp.asarray(b), jnp.full(e2, l),
-        jnp.zeros(e2, jnp.int32), jnp.zeros(e2, jnp.int32), k=15, band=33,
-        max_steps=1600,
-    ).score)
-    f_al().block_until_ready()
-    t0 = time.perf_counter()
-    f_al().block_until_ready()
-    t_al = (time.perf_counter() - t0) * 1e6
-    rows.append(("kernels/xdrop_align_256x800bp", t_al,
-                 f"pairs_per_s={e2 / (t_al / 1e6):.0f}"))
+    # --- xdrop_extend backend axis (seed-and-extend via batch_extend) ---
+    e2, l = 128, 600
+    ac = rng.integers(0, 4, (e2, l)).astype(np.uint8)
+    bc = np.where(rng.random((e2, l)) < 0.05, (ac + 1) % 4, ac).astype(np.uint8)
+    args = (jnp.asarray(ac), jnp.full(e2, l, jnp.int32), jnp.asarray(bc),
+            jnp.full(e2, l, jnp.int32), jnp.zeros(e2, jnp.int32),
+            jnp.zeros(e2, jnp.int32))
+    xd_times = {}
+    for be in backends:
+        f = jax.jit(lambda be=be: batch_extend(
+            *args, k=15, band=33, max_steps=1200, backend=be).score)
+        xd_times[be] = _time_us(f)
+        rows.append((f"kernels/xdrop_align_{e2}x{l}bp[{be}]", xd_times[be],
+                     f"pairs_per_s={e2 / (xd_times[be] / 1e6):.0f}"))
+    if len(xd_times) == 2:
+        rows.append(("kernels/xdrop_align_speedup", 0.0,
+                     f"ref/pallas={xd_times['reference'] / xd_times['pallas']:.2f}x"))
     return rows
+
+
+def main() -> None:
+    import argparse
+
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--backend", default="both",
+                   choices=["reference", "pallas", "auto", "both"])
+    ns = p.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(backend=ns.backend):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..core.backend import dispatch
+
 NEG = jnp.int32(-(10**9) // 2)
 
 
@@ -153,7 +155,32 @@ def extend_pair(
 
 
 def batch_extend(
-    a_codes, a_len, b_codes_oriented, b_len, pa, pb, *, k, **kw
+    a_codes, a_len, b_codes_oriented, b_len, pa, pb, *, k,
+    backend: str = "reference", match: int = 1,
+    pairs_per_block: int | None = None, **kw
 ) -> PairAlignment:
-    f = partial(extend_pair, k=k, **kw)
-    return jax.vmap(f)(a_codes, a_len, b_codes_oriented, b_len, pa, pb)
+    """Batched seed-and-extend through the kernel-backend dispatch layer
+    (core/backend.py): forward and backward extensions each run as one
+    batched ``xdrop_extend`` op on the selected backend, then combine into
+    the same ``PairAlignment`` as ``extend_pair``."""
+    fn = dispatch("xdrop_extend", backend)
+    pa = jnp.asarray(pa, jnp.int32)
+    pb = jnp.asarray(pb, jnp.int32)
+    a_len = jnp.asarray(a_len, jnp.int32)
+    b_len = jnp.asarray(b_len, jnp.int32)
+    step = jnp.ones(pa.shape, jnp.int32)
+    kw = dict(match=match, pairs_per_block=pairs_per_block, **kw)
+    fs, fa, fb = fn(
+        a_codes, pa + k, step, a_len - pa - k,
+        b_codes_oriented, pb + k, step, b_len - pb - k, **kw
+    )
+    bs, ba, bb = fn(
+        a_codes, pa - 1, -step, pa, b_codes_oriented, pb - 1, -step, pb, **kw
+    )
+    return PairAlignment(
+        score=k * match + fs + bs,
+        bi=pa - ba,
+        ei=pa + k + fa,
+        bj=pb - bb,
+        ej=pb + k + fb,
+    )

@@ -20,8 +20,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.backend import resolve_backend
 from ..core.semiring import overlap_semiring
 from ..core.spgemm import spgemm
+from ..core.spmat import map_row_blocks
 from ..core.string_graph import build_overlap_graph, classify_overlaps, drop_contained
 from ..core.transitive_reduction import (
     transitive_reduction,
@@ -58,6 +60,9 @@ class PipelineConfig:
     tr_max_iters: int = 8
     fused_tr: bool = True  # beyond-paper sampled square (DESIGN.md §2)
     align_chunk: int = 4096
+    # kernel backend for the hot ops (x-drop extension, min-plus squares):
+    # "auto" = compiled Pallas on TPU, reference jnp elsewhere (DESIGN.md §2.5)
+    backend: str = "auto"
 
 
 @dataclasses.dataclass
@@ -69,8 +74,11 @@ class AssemblyResult:
     timings: Dict[str, float]
 
 
-def _tic(timings, key, t0):
-    jax.block_until_ready  # noqa: B018 — documentation of intent
+def _tic(timings, key, t0, out=None):
+    """Record wall-clock for a stage, first syncing on its output so we
+    measure execution rather than async dispatch."""
+    if out is not None:
+        jax.block_until_ready(out)
     t = time.perf_counter()
     timings[key] = timings.get(key, 0.0) + (t - t0)
     return t
@@ -80,15 +88,15 @@ def assemble(codes, lengths, cfg: PipelineConfig = PipelineConfig()) -> Assembly
     codes = jnp.asarray(codes, jnp.uint8)
     lengths = jnp.asarray(lengths, jnp.int32)
     n = codes.shape[0]
+    backend = resolve_backend(cfg.backend)
     timings: Dict[str, float] = {}
-    stats: Dict[str, Any] = {"n_reads": int(n)}
+    stats: Dict[str, Any] = {"n_reads": int(n), "backend": backend}
 
     # --- CountKmer (paper: CountKmer) ---
     t0 = time.perf_counter()
     kmers = extract_kmers(codes, lengths, k=cfg.k)
     kc = count_and_select(kmers, lower=cfg.lower, upper=cfg.upper)
-    kc = jax.tree.map(lambda x: x.block_until_ready(), kc)
-    t0 = _tic(timings, "CountKmer", t0)
+    t0 = _tic(timings, "CountKmer", t0, kc)
     stats["m_reliable"] = int(kc.m_reliable)
     stats["n_unique_kmers"] = int(kc.n_unique)
     stats["n_singletons"] = int(kc.n_singleton)
@@ -104,8 +112,7 @@ def assemble(codes, lengths, cfg: PipelineConfig = PipelineConfig()) -> Assembly
         read_capacity=cfg.read_capacity,
         kmer_capacity=cfg.upper,
     )
-    jax.block_until_ready((a.cols, at.cols))
-    t0 = _tic(timings, "CreateSpMat", t0)
+    t0 = _tic(timings, "CreateSpMat", t0, (a.cols, at.cols))
     stats["overflow_A"] = int(ovf_a)
     stats["nnz_A"] = int(a.nnz())
 
@@ -113,8 +120,7 @@ def assemble(codes, lengths, cfg: PipelineConfig = PipelineConfig()) -> Assembly
     c_mat, ovf_c = spgemm(
         a, at, semiring=overlap_semiring, capacity=cfg.overlap_capacity
     )
-    jax.block_until_ready(c_mat.cols)
-    t0 = _tic(timings, "SpGEMM", t0)
+    t0 = _tic(timings, "SpGEMM", t0, c_mat.cols)
     stats["overflow_C"] = int(ovf_c)
     stats["nnz_C"] = int(c_mat.nnz())
     stats["c_density"] = stats["nnz_C"] / max(1, int(n))
@@ -137,28 +143,53 @@ def assemble(codes, lengths, cfg: PipelineConfig = PipelineConfig()) -> Assembly
     lj = lengths[jnp.where(pv, pair_j, 0)]
     pb_or = jnp.where(strand == 1, lj - cfg.k - pb, pb)
 
+    # Candidate compaction: C's ELL layout leaves most of the n × K_C slots
+    # masked — instead of aligning every slot, gather the pv-valid pairs into
+    # a bucket padded to the next power of two of the live count, align only
+    # the bucket (row-chunked), and scatter results back to slot order.
     e_total = int(pair_i.shape[0])
-    res_parts = []
-    for s0 in range(0, e_total, cfg.align_chunk):
-        s1 = min(s0 + cfg.align_chunk, e_total)
-        sl = slice(s0, s1)
-        ai = codes[jnp.where(pv[sl], pair_i[sl], 0)]
-        bj = codes[jnp.where(pv[sl], pair_j[sl], 0)]
-        bj = jnp.where(
-            (strand[sl] == 1)[:, None], revcomp(bj, lj[sl]), bj
+    n_live = int(jnp.sum(pv))
+    bucket = 1 << max(0, n_live - 1).bit_length()  # next pow2, ≥ 1
+    idx = jnp.nonzero(pv, size=bucket, fill_value=0)[0]
+    live = jnp.arange(bucket) < n_live
+
+    cand = {
+        "i": pair_i[idx],
+        "j": pair_j[idx],
+        "li": li[idx],
+        "lj": lj[idx],
+        "pa": jnp.maximum(pa[idx], 0),
+        "pb": jnp.maximum(pb_or[idx], 0),
+        "strand": strand[idx],
+    }
+
+    def _align_block(blk):
+        ai = codes[blk["i"]]
+        bj = codes[blk["j"]]
+        bj = jnp.where((blk["strand"] == 1)[:, None], revcomp(bj, blk["lj"]), bj)
+        out = al.batch_extend(
+            ai, blk["li"], bj, blk["lj"], blk["pa"], blk["pb"],
+            k=cfg.k, backend=backend, xdrop=cfg.xdrop, match=cfg.match,
+            mismatch=cfg.mismatch, gap=cfg.gap, band=cfg.band,
+            max_steps=cfg.max_steps,
         )
-        res_parts.append(
-            al.batch_extend(
-                ai, li[sl], bj, lj[sl],
-                jnp.maximum(pa[sl], 0), jnp.maximum(pb_or[sl], 0),
-                k=cfg.k, xdrop=cfg.xdrop, match=cfg.match,
-                mismatch=cfg.mismatch, gap=cfg.gap, band=cfg.band,
-                max_steps=cfg.max_steps,
-            )
-        )
-    res = jax.tree.map(lambda *xs: jnp.concatenate(xs), *res_parts)
-    jax.block_until_ready(res.score)
-    t0 = _tic(timings, "Alignment", t0)
+        return tuple(out), None
+
+    res_b, _ = map_row_blocks(
+        _align_block, cand, n_rows=bucket,
+        row_chunk=min(cfg.align_chunk, bucket),
+    )
+
+    # Scatter bucket results back to the (n · K_C,) slot layout; dead slots
+    # (pv False) keep zeros and are masked out of ``passed`` below.
+    safe_slot = jnp.where(live, idx, e_total)
+
+    def _scatter(x):
+        buf = jnp.zeros((e_total + 1,) + x.shape[1:], x.dtype)
+        return buf.at[safe_slot].set(x)[:e_total]
+
+    res = al.PairAlignment(*(_scatter(x) for x in res_b))
+    t0 = _tic(timings, "Alignment", t0, res.score)
 
     span = jnp.minimum(res.ei - res.bi, res.ej - res.bj)
     passed = (
@@ -166,7 +197,9 @@ def assemble(codes, lengths, cfg: PipelineConfig = PipelineConfig()) -> Assembly
         & (res.score >= cfg.score_frac * span)
         & (span >= cfg.min_overlap)
     )
-    stats["n_aligned"] = int(jnp.sum(pv))
+    stats["n_aligned"] = n_live
+    stats["align_candidates"] = e_total
+    stats["align_bucket"] = int(bucket)
     stats["n_passed"] = int(jnp.sum(passed))
 
     # --- Build R: classify overlaps, drop contained ---
@@ -177,8 +210,7 @@ def assemble(codes, lengths, cfg: PipelineConfig = PipelineConfig()) -> Assembly
         pair_i, pair_j, cls, passed, n_reads=int(n), capacity=cfg.r_capacity
     )
     r_mat = drop_contained(r_mat, contained)
-    jax.block_until_ready(r_mat.cols)
-    t0 = _tic(timings, "BuildR", t0)
+    t0 = _tic(timings, "BuildR", t0, r_mat.cols)
     stats["overflow_R"] = int(ovf_r)
     stats["nnz_R"] = int(r_mat.nnz())
     stats["r_density"] = stats["nnz_R"] / max(1, int(n))
@@ -186,9 +218,10 @@ def assemble(codes, lengths, cfg: PipelineConfig = PipelineConfig()) -> Assembly
 
     # --- TrReduction: Algorithm 2 ---
     tr = transitive_reduction_fused if cfg.fused_tr else transitive_reduction
-    s_mat, tr_stats = tr(r_mat, fuzz=cfg.tr_fuzz, max_iters=cfg.tr_max_iters)
-    jax.block_until_ready(s_mat.cols)
-    t0 = _tic(timings, "TrReduction", t0)
+    s_mat, tr_stats = tr(
+        r_mat, fuzz=cfg.tr_fuzz, max_iters=cfg.tr_max_iters, backend=backend
+    )
+    t0 = _tic(timings, "TrReduction", t0, s_mat.cols)
     stats["tr_iterations"] = int(tr_stats.iterations)
     stats["nnz_S"] = int(s_mat.nnz())
     stats["s_density"] = stats["nnz_S"] / max(1, int(n))

@@ -1,0 +1,37 @@
+"""Version-compatibility shims for the installed jax.
+
+The codebase targets current jax APIs; older installations spell some of
+them differently.  Import the symbols from here instead of guessing:
+
+* ``shard_map`` — ``jax.shard_map`` (new) or
+  ``jax.experimental.shard_map.shard_map`` (pre-0.6).
+* ``pvary`` — ``jax.lax.pvary`` (new); identity on older jax, whose
+  shard_map has no varying-manual-axes tracking to satisfy.
+"""
+
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pragma: no cover - version-dependent
+    from functools import partial as _partial
+
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma=False):
+        """Old-jax adapter: ``check_vma`` is spelled ``check_rep`` there, and
+        its replication checker predates rules for ``while``/``scan`` bodies
+        (used by SUMMA's ring loop), so it stays off."""
+        kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+        if f is None:
+            return _partial(_shard_map_old, **kw)
+        return _shard_map_old(f, **kw)
+
+if hasattr(jax.lax, "pvary"):
+    pvary = jax.lax.pvary
+else:  # pragma: no cover - version-dependent
+    def pvary(x, axis_name):
+        return x

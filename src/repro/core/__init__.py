@@ -11,7 +11,21 @@ from .semiring import (  # noqa: F401
     overlap_semiring,
     plus_times_f32,
 )
-from .spmat import EllMatrix, from_coo, merge_sorted_rows, prune  # noqa: F401
+from .backend import (  # noqa: F401
+    BACKENDS,
+    available_backends,
+    dispatch,
+    register_op,
+    resolve_backend,
+    resolve_interpret,
+)
+from .spmat import (  # noqa: F401
+    EllMatrix,
+    from_coo,
+    map_row_blocks,
+    merge_sorted_rows,
+    prune,
+)
 from .spgemm import spgemm, spgemm_masked, transpose  # noqa: F401
 from .string_graph import (  # noqa: F401
     OverlapClass,

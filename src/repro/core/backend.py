@@ -1,0 +1,100 @@
+"""Kernel-backend dispatch layer (DESIGN.md §2.5).
+
+The pipeline's two compute hot spots — batched x-drop seed extension
+(paper §IV-D) and the dense min-plus squares inside transitive reduction
+(Algorithm 2) — each exist twice in this repo: a pure-jnp *reference*
+implementation (the oracle) and a Pallas TPU *kernel*.  This module is the
+single seam that decides, per op, which one runs:
+
+  * ``"reference"`` — the jnp oracle.  Always available, runs anywhere.
+  * ``"pallas"``    — the Pallas kernel.  Compiled on TPU; on other platforms
+    it runs in interpret mode (bit-identical semantics, no speedup) so parity
+    tests and CI exercise the exact kernel code path.
+  * ``"auto"``      — platform detection: ``"pallas"`` (compiled) when the
+    default JAX backend is TPU, ``"reference"`` elsewhere.
+
+Contract
+--------
+Implementations register under a string op name via :func:`register_op`; the
+kernels package registers both backends for every op it provides when it is
+imported (``dispatch`` imports it lazily, so ``core`` never depends on
+``kernels`` at module-import time and the ``core → kernels → assembly → core``
+cycle is broken).  Registered implementations of one op must agree *exactly*
+(same outputs bit-for-bit on the same inputs) — asserted by the parity tests
+in ``tests/test_kernels.py`` and the golden-assembly test in
+``tests/test_backend.py``.  Anything that holds for one backend's output may
+therefore be assumed for the other's.
+
+Current ops
+-----------
+``xdrop_extend``
+    ``(a, base_a, step_a, len_a, b, base_b, step_b, len_b, *, xdrop, match,
+    mismatch, gap, band, max_steps, pairs_per_block) -> (score, ai, bj)``
+    batched single-direction x-drop extension.
+``minplus_dense``
+    ``(a, b) -> n`` with ``a (M, K, 4)``, ``b (K, N, 4)``, ``n (M, N, 4)``
+    f32; the orientation-resolved dense min-plus matmul of Algorithm 2.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+
+BACKENDS = ("auto", "reference", "pallas")
+
+_REGISTRY: Dict[Tuple[str, str], Callable] = {}
+
+
+def resolve_backend(backend: str = "auto") -> str:
+    """Resolve a ``PipelineConfig.backend`` value to a concrete backend."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "reference"
+    return backend
+
+
+def resolve_interpret(interpret: bool | str = "auto") -> bool:
+    """Resolve a kernel's ``interpret`` flag: ``"auto"`` means compiled on
+    TPU, interpret mode everywhere else."""
+    if interpret == "auto":
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def register_op(op: str, backend: str, fn: Callable) -> Callable:
+    """Register ``fn`` as the ``backend`` implementation of ``op``.
+
+    Called by the kernels layer at import time; re-registration overwrites
+    (latest wins) so tests can inject instrumented implementations."""
+    if backend not in BACKENDS or backend == "auto":
+        raise ValueError(f"backend must be 'reference' or 'pallas', got {backend!r}")
+    _REGISTRY[(op, backend)] = fn
+    return fn
+
+
+def available_backends(op: str) -> Tuple[str, ...]:
+    _ensure_registered()
+    return tuple(sorted(b for (o, b) in _REGISTRY if o == op))
+
+
+def _ensure_registered() -> None:
+    # Default implementations live in repro.kernels; importing it triggers
+    # their register_op calls.  Lazy so core stays import-light.
+    from .. import kernels  # noqa: F401
+
+
+def dispatch(op: str, backend: str = "auto") -> Callable:
+    """Return the implementation of ``op`` for ``backend`` (resolving
+    ``"auto"`` by platform)."""
+    b = resolve_backend(backend)
+    key = (op, b)
+    if key not in _REGISTRY:
+        _ensure_registered()
+    if key not in _REGISTRY:
+        known = sorted({o for (o, _) in _REGISTRY})
+        raise KeyError(f"no {b!r} implementation registered for op {op!r}; "
+                       f"known ops: {known}")
+    return _REGISTRY[key]

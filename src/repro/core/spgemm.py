@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from .semiring import Semiring, tree_where, INF
-from .spmat import EllMatrix, NO_COL, from_coo, merge_sorted_rows
+from .spmat import EllMatrix, NO_COL, from_coo, map_row_blocks, merge_sorted_rows
 
 
 @partial(jax.jit, static_argnames=("semiring", "capacity", "row_chunk"))
@@ -69,33 +69,18 @@ def spgemm(
 
 def _spgemm_chunked(a, b, *, semiring, capacity, row_chunk):
     n = a.cols.shape[0]
-    nc = -(-n // row_chunk)
-    pad = nc * row_chunk - n
-
-    def pad_rows(x, fill):
-        return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1),
-                       constant_values=fill)
-
-    cols_p = pad_rows(a.cols, NO_COL).reshape(nc, row_chunk, a.cols.shape[1])
-    vals_p = jax.tree.map(
-        lambda v: pad_rows(v, 0).reshape((nc, row_chunk) + v.shape[1:]), a.vals
-    )
 
     def one(chunk):
         cc, cv = chunk
         am = EllMatrix(cols=cc, vals=cv, n_cols=a.n_cols)
         c, ovf = spgemm(am, b, semiring=semiring, capacity=capacity)
-        return c.cols, c.vals, ovf
+        return (c.cols, c.vals), ovf
 
-    oc, ov, ovfs = jax.lax.map(one, (cols_p, vals_p))
-    out = EllMatrix(
-        cols=oc.reshape(nc * row_chunk, capacity)[:n],
-        vals=jax.tree.map(
-            lambda v: v.reshape((nc * row_chunk, capacity) + v.shape[3:])[:n], ov
-        ),
-        n_cols=b.n_cols,
+    (oc, ov), ovfs = map_row_blocks(
+        one, (a.cols, a.vals), n_rows=n, row_chunk=row_chunk,
+        fills=(-1, jax.tree.map(lambda _: 0, a.vals)),
     )
-    return out, jnp.sum(ovfs)
+    return EllMatrix(cols=oc, vals=ov, n_cols=b.n_cols), jnp.sum(ovfs)
 
 
 @partial(jax.jit, static_argnames=("semiring", "row_chunk"))
@@ -112,32 +97,18 @@ def spgemm_masked(
 
 def _spgemm_masked_chunked(a, b, mask, *, semiring, row_chunk):
     n = a.cols.shape[0]
-    nc = -(-n // row_chunk)
-    pad = nc * row_chunk - n
-
-    def pad_rows(x, fill):
-        return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1),
-                       constant_values=fill)
-
-    def resh(x):
-        return x.reshape((nc, row_chunk) + x.shape[1:])
-
-    ac = resh(pad_rows(a.cols, NO_COL))
-    av = jax.tree.map(lambda v: resh(pad_rows(v, 0)), a.vals)
-    mc = resh(pad_rows(mask.cols, NO_COL))
-    mv = jax.tree.map(lambda v: resh(pad_rows(v, 0)), mask.vals)
 
     def one(chunk):
         cc, cv, kc, kv = chunk
         am = EllMatrix(cols=cc, vals=cv, n_cols=a.n_cols)
         mm = EllMatrix(cols=kc, vals=kv, n_cols=mask.n_cols)
-        out = _spgemm_masked_impl(am, b, mm, semiring=semiring)
-        return out.vals
+        return _spgemm_masked_impl(am, b, mm, semiring=semiring).vals, None
 
-    ov = jax.lax.map(one, (ac, av, mc, mv))
-    km = mask.cols.shape[1]
-    vals = jax.tree.map(
-        lambda v: v.reshape((nc * row_chunk, km) + v.shape[3:])[:n], ov
+    vals, _ = map_row_blocks(
+        one, (a.cols, a.vals, mask.cols, mask.vals), n_rows=n,
+        row_chunk=row_chunk,
+        fills=(-1, jax.tree.map(lambda _: 0, a.vals),
+               -1, jax.tree.map(lambda _: 0, mask.vals)),
     )
     return EllMatrix(cols=mask.cols, vals=vals, n_cols=mask.n_cols)
 

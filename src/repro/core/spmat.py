@@ -99,6 +99,46 @@ class EllMatrix:
         return tree_where(found, got, zero), found
 
 
+def map_row_blocks(fn, inputs: Any, *, n_rows: int, row_chunk: int,
+                   fills: Any = None):
+    """Map ``fn`` over fixed-size row blocks of ``inputs`` with ``lax.map``.
+
+    The shared chunking combinator behind ``spgemm``'s row-chunked paths and
+    the pipeline's compacted alignment driver: it bounds peak memory of a
+    per-row computation by processing ``row_chunk`` rows at a time while
+    tracing ``fn`` exactly once.
+
+    Args:
+      fn: ``block -> (row_out, aux)`` where ``block`` is ``inputs`` restricted
+        to ``row_chunk`` rows, ``row_out`` is a pytree whose leaves have
+        leading dim ``row_chunk``, and ``aux`` is any per-block pytree
+        (``None`` if unused).
+      inputs: pytree of arrays with leading dim ``n_rows``.
+      fills: pytree matching ``inputs`` of scalar pad values for the rows
+        padded onto the last block (default 0 everywhere).
+
+    Returns ``(row_out, aux)`` with ``row_out`` leaves reassembled to leading
+    dim ``n_rows`` and ``aux`` leaves stacked over the ``ceil(n_rows /
+    row_chunk)`` blocks (callers reduce, e.g. summing overflow counters).
+    """
+    nb = -(-n_rows // row_chunk)
+    pad = nb * row_chunk - n_rows
+    if fills is None:
+        fills = jax.tree.map(lambda _: 0, inputs)
+
+    def blockify(x, fill):
+        xp = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1),
+                     constant_values=fill)
+        return xp.reshape((nb, row_chunk) + x.shape[1:])
+
+    blocks = jax.tree.map(blockify, inputs, fills)
+    row_out, aux = jax.lax.map(fn, blocks)
+    merged = jax.tree.map(
+        lambda v: v.reshape((nb * row_chunk,) + v.shape[2:])[:n_rows], row_out
+    )
+    return merged, aux
+
+
 def _segmented_combine(flags: jnp.ndarray, vals: Any, add, axis: int = 0) -> Any:
     """Inclusive segmented scan along ``axis``: combine vals within runs
     (flags==True starts a new run).  Returns scanned vals (run-prefix sums

@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import pvary, shard_map
 from .semiring import INF, Semiring, minplus_orient_semiring as MPSR, tree_where
 from .spgemm import spgemm
 from .spmat import EllMatrix, NO_COL, from_coo, merge_sorted_rows, prune
@@ -185,7 +186,7 @@ def summa_allgather(
         return cc, cv, jax.lax.psum(ovf, (*row_axes, col_axis))
 
     fm = jax.jit(
-        jax.shard_map(
+        shard_map(
             f,
             mesh=mesh,
             in_specs=(spec, spec, spec, spec),
@@ -265,11 +266,11 @@ def summa_ring(a: DistEll, b: DistEll, *, semiring: Semiring, out_block_capacity
         j = jax.lax.axis_index(col_axis)
         n_loc = a_cols.shape[0]
         both = (row_axis, col_axis)
-        acc_cols = jax.lax.pvary(
+        acc_cols = pvary(
             jnp.full((n_loc, out_block_capacity), NO_COL, dtype=jnp.int32), both
         )
         acc_vals = jax.tree.map(
-            lambda x: jax.lax.pvary(x, both),
+            lambda x: pvary(x, both),
             semiring.zero((n_loc, out_block_capacity)),
         )
         left = [((t + 1) % pc, t) for t in range(pc)]  # rotate left/up
@@ -300,13 +301,13 @@ def summa_ring(a: DistEll, b: DistEll, *, semiring: Semiring, out_block_capacity
 
         init = (
             acc_cols, acc_vals, a_cols, a_vals, b_cols, b_vals,
-            jax.lax.pvary(jnp.int32(0), both),
+            pvary(jnp.int32(0), both),
         )
         acc_cols, acc_vals, *_, ovf = jax.lax.fori_loop(0, pc, stage, init)
         return acc_cols, acc_vals, jax.lax.psum(ovf, (row_axis, col_axis))
 
     fm = jax.jit(
-        jax.shard_map(
+        shard_map(
             f, mesh=mesh, in_specs=(spec, spec, spec, spec),
             out_specs=(spec, spec, P()),
         )
@@ -401,7 +402,7 @@ def dist_transitive_reduction(
         return r_cols, r_vals, iters, nnz_f
 
     fm = jax.jit(
-        jax.shard_map(
+        shard_map(
             f, mesh=mesh, in_specs=(spec, spec),
             out_specs=(spec, spec, P(), P()),
         )

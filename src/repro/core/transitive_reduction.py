@@ -32,9 +32,16 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from .backend import dispatch, resolve_backend
 from .semiring import INF, minplus_orient_semiring as SR
 from .spgemm import spgemm, spgemm_masked
 from .spmat import EllMatrix, prune
+
+
+# Above this many rows the dense-square Pallas TR path would materialize an
+# (n, n, 4) f32 operand per iteration (O(n²) HBM); fall back to the O(n·K)
+# sampled ELL square instead.  4096 rows ≈ 256 MB per operand.
+TR_DENSE_MAX_ROWS = 4096
 
 
 @partial(
@@ -77,7 +84,7 @@ def _prune_combos(r: EllMatrix, transitive: jnp.ndarray) -> EllMatrix:
     return prune(r2, dead, SR)
 
 
-@partial(jax.jit, static_argnames=("n_capacity", "max_iters", "fused"))
+@partial(jax.jit, static_argnames=("n_capacity", "max_iters", "fused", "backend"))
 def _tr_impl(
     r: EllMatrix,
     fuzz: float,
@@ -85,6 +92,7 @@ def _tr_impl(
     n_capacity: int,
     max_iters: int,
     fused: bool,
+    backend: str = "reference",
 ) -> Tuple[EllMatrix, TRStats]:
     nnz0 = r.nnz()
 
@@ -95,7 +103,21 @@ def _tr_impl(
     def body(carry):
         r, _, cur, it, ovf = carry
         v = row_max_suffix(r) + fuzz
-        if fused:
+        if fused and backend == "pallas":
+            # Dense orientation-resolved min-plus square on the Pallas kernel,
+            # sampled back at R's own pattern.  Bit-identical to the sampled
+            # ELL square: absent entries are +inf, the additive identity, so
+            # contracting over all n columns equals contracting over R's
+            # slots, and neither path can lose min-candidates to capacity.
+            minplus = dispatch("minplus_dense", "pallas")
+            dense = r.to_dense(SR)
+            nd = minplus(dense, dense)
+            n = r.cols.shape[0]
+            safe = jnp.where(r.mask, r.cols, 0)
+            vals_at_r = nd[jnp.arange(n)[:, None], safe]
+            found = r.mask
+            step_ovf = jnp.int32(0)
+        elif fused:
             n_at_r = spgemm_masked(r, r, r, semiring=SR)
             found = r.mask
             vals_at_r = n_at_r.vals
@@ -121,21 +143,39 @@ def transitive_reduction(
     *,
     n_capacity: int | None = None,
     max_iters: int = 10,
+    backend: str = "reference",
 ) -> Tuple[EllMatrix, TRStats]:
     """Paper-faithful Algorithm 2.  ``n_capacity`` bounds N = R² rows
-    (default: min(K², 4K))."""
+    (default: min(K², 4K)).
+
+    ``backend`` is accepted for API uniformity but the faithful path always
+    runs the capacity-bounded ELL square: its overflow accounting is part of
+    its contract, and the dense kernel square (which cannot overflow) would
+    silently change results whenever N overflows ``n_capacity``.  Use
+    ``transitive_reduction_fused`` for the kernel-backed variant."""
     k = r.capacity
     if n_capacity is None:
         n_capacity = min(k * k, 4 * k)
+    resolve_backend(backend)  # validate, then ignore (see docstring)
     return _tr_impl(
-        r, jnp.float32(fuzz), n_capacity=n_capacity, max_iters=max_iters, fused=False
+        r, jnp.float32(fuzz), n_capacity=n_capacity, max_iters=max_iters,
+        fused=False, backend="reference",
     )
 
 
 def transitive_reduction_fused(
-    r: EllMatrix, fuzz: float = 200.0, *, max_iters: int = 10
+    r: EllMatrix, fuzz: float = 200.0, *, max_iters: int = 10,
+    backend: str = "reference",
 ) -> Tuple[EllMatrix, TRStats]:
-    """Beyond-paper fused/sampled variant (see module docstring)."""
+    """Beyond-paper fused/sampled variant (see module docstring).
+    ``backend="pallas"`` routes the sampled square through the dense
+    min-plus Pallas kernel (bit-identical, see ``_tr_impl``); graphs wider
+    than ``TR_DENSE_MAX_ROWS`` fall back to the O(n·K) ELL square rather
+    than materializing an O(n²) dense operand per iteration."""
+    b = resolve_backend(backend)
+    if b == "pallas" and r.cols.shape[0] > TR_DENSE_MAX_ROWS:
+        b = "reference"
     return _tr_impl(
-        r, jnp.float32(fuzz), n_capacity=1, max_iters=max_iters, fused=True
+        r, jnp.float32(fuzz), n_capacity=1, max_iters=max_iters, fused=True,
+        backend=b,
     )

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ...core.backend import resolve_interpret
+
 INF = float("inf")  # plain python float: Pallas kernels cannot capture traced consts
 
 
@@ -56,9 +58,12 @@ def minplus_pallas(
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | str = "auto",
 ) -> jnp.ndarray:
-    """a (M, K, 4), b (K, N, 4) -> (M, N, 4) f32."""
+    """a (M, K, 4), b (K, N, 4) -> (M, N, 4) f32.
+
+    ``interpret="auto"`` compiles on TPU and interprets elsewhere."""
+    interpret = resolve_interpret(interpret)
     m, k, _ = a.shape
     n = b.shape[1]
     bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ...core.backend import resolve_interpret
+
 NEG = -(10**9) // 2  # plain int: Pallas kernels cannot capture traced consts
 
 
@@ -104,8 +106,9 @@ def xdrop_pallas(
     a, base_a, step_a, len_a, b, base_b, step_b, len_b, *,
     band: int = 33, max_steps: int = 256, xdrop: int = 15, match: int = 1,
     mismatch: int = -1, gap: int = -1, pairs_per_block: int = 8,
-    interpret: bool = True,
+    interpret: bool | str = "auto",
 ):
+    interpret = resolve_interpret(interpret)
     e, lmax_a = a.shape
     lmax_b = b.shape[1]
     pb = min(pairs_per_block, e)

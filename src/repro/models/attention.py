@@ -18,6 +18,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..compat import shard_map
+
 NEG_INF = -1e30
 
 
@@ -183,7 +185,7 @@ def decode_attention_sharded(
         return out.reshape(b, 1, hq, d).astype(q.dtype)
 
     dp = dp_axes if dp_axes else None
-    return jax.shard_map(
+    return shard_map(
         f,
         mesh=mesh,
         in_specs=(
@@ -232,7 +234,7 @@ def cache_update_sharded(k_cache, v_cache, k_new, v_new, pos, *, mesh,
         vc2 = jnp.where(owner, vw, vc)
         return kc2, vc2
 
-    return jax.shard_map(
+    return shard_map(
         f, mesh=mesh,
         in_specs=(P(dp, seq_axis), P(dp, seq_axis), P(dp), P(dp)),
         out_specs=(P(dp, seq_axis), P(dp, seq_axis)),

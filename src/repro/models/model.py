@@ -24,6 +24,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from ..compat import shard_map
 from .attention import (
     cache_update,
     decode_attention,
@@ -653,7 +654,7 @@ def chunked_ce_loss(x, labels, w_unembed, cfg: ModelConfig, *, mesh=None):
         # check_vma=False: lse/gold are psummed over "model" so loss is
         # provably model-invariant, but the vma tracker marks the all-gathered
         # max as varying and can't see the invariance.
-        ce_sm = jax.shard_map(
+        ce_sm = shard_map(
             ce_local,
             mesh=mesh,
             in_specs=(P(dp), P(dp), P(None, "model")),

@@ -24,6 +24,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..compat import shard_map
 from .layers import dense
 
 
@@ -115,7 +116,7 @@ def moe_ffn_shardmap(
         y = _dispatch_combine(x, w_l, idx_l.astype(jnp.int32), p_loc, capacity)
         return jax.lax.psum(y, expert_axis)
 
-    return jax.shard_map(
+    return shard_map(
         f,
         mesh=mesh,
         in_specs=(

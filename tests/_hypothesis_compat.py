@@ -1,0 +1,188 @@
+"""Hypothesis with a deterministic fallback.
+
+The property-test modules import ``given``/``settings``/``st`` from here.
+When the real ``hypothesis`` package is installed it is used unchanged; when
+it is not (minimal CI images), a small deterministic strategy engine stands
+in so the property tests still *run* instead of erroring at collection.
+
+The fallback covers exactly the strategy surface these tests use —
+``integers``, ``floats``, ``just``, ``sampled_from``, ``lists``, ``tuples``,
+``text``, ``one_of`` (``|``) and ``.map`` — draws a fixed number of examples
+from a per-test seeded RNG (so failures reproduce), and always tries the
+minimal example first (empty lists, lower bounds) the way hypothesis's
+shrinking would surface it.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import types
+    import zlib
+
+    import numpy as np
+
+    _DEFAULT_MAX_EXAMPLES = 25
+
+    class _Strategy:
+        def example(self, rng):
+            raise NotImplementedError
+
+        def minimal(self):
+            raise NotImplementedError
+
+        def map(self, f):
+            return _Mapped(self, f)
+
+        def __or__(self, other):
+            return _OneOf(self, other)
+
+    class _Mapped(_Strategy):
+        def __init__(self, base, f):
+            self.base, self.f = base, f
+
+        def example(self, rng):
+            return self.f(self.base.example(rng))
+
+        def minimal(self):
+            return self.f(self.base.minimal())
+
+    class _OneOf(_Strategy):
+        def __init__(self, *opts):
+            self.opts = []
+            for o in opts:  # flatten nested (a | b) | c
+                self.opts.extend(o.opts if isinstance(o, _OneOf) else [o])
+
+        def example(self, rng):
+            return self.opts[int(rng.integers(len(self.opts)))].example(rng)
+
+        def minimal(self):
+            return self.opts[0].minimal()
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value=0, max_value=2**31 - 1):
+            self.lo, self.hi = int(min_value), int(max_value)
+
+        def example(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+        def minimal(self):
+            return self.lo
+
+    class _Floats(_Strategy):
+        def __init__(self, min_value=0.0, max_value=1.0):
+            self.lo, self.hi = float(min_value), float(max_value)
+
+        def example(self, rng):
+            return float(rng.uniform(self.lo, self.hi))
+
+        def minimal(self):
+            return self.lo
+
+    class _Just(_Strategy):
+        def __init__(self, value):
+            self.value = value
+
+        def example(self, rng):
+            return self.value
+
+        def minimal(self):
+            return self.value
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def example(self, rng):
+            return self.elements[int(rng.integers(len(self.elements)))]
+
+        def minimal(self):
+            return self.elements[0]
+
+    class _Lists(_Strategy):
+        def __init__(self, elem, min_size=0, max_size=None):
+            self.elem = elem
+            self.lo = int(min_size)
+            self.hi = int(max_size) if max_size is not None else self.lo + 10
+
+        def example(self, rng):
+            n = int(rng.integers(self.lo, self.hi + 1))
+            return [self.elem.example(rng) for _ in range(n)]
+
+        def minimal(self):
+            return [self.elem.minimal() for _ in range(self.lo)]
+
+    class _Tuples(_Strategy):
+        def __init__(self, *elems):
+            self.elems = elems
+
+        def example(self, rng):
+            return tuple(e.example(rng) for e in self.elems)
+
+        def minimal(self):
+            return tuple(e.minimal() for e in self.elems)
+
+    class _Text(_Strategy):
+        def __init__(self, alphabet="abc", min_size=0, max_size=None):
+            self.alphabet = list(alphabet)
+            self.lo = int(min_size)
+            self.hi = int(max_size) if max_size is not None else self.lo + 10
+
+        def example(self, rng):
+            n = int(rng.integers(self.lo, self.hi + 1))
+            return "".join(
+                self.alphabet[int(i)]
+                for i in rng.integers(0, len(self.alphabet), n)
+            )
+
+        def minimal(self):
+            return self.alphabet[0] * self.lo
+
+    st = types.SimpleNamespace(
+        integers=_Integers,
+        floats=_Floats,
+        just=_Just,
+        sampled_from=_SampledFrom,
+        lists=_Lists,
+        tuples=_Tuples,
+        text=_Text,
+        one_of=lambda *opts: _OneOf(*opts),
+    )
+
+    def given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+                for i in range(n):
+                    if i == 0:
+                        args = tuple(s.minimal() for s in strategies)
+                    else:
+                        args = tuple(s.example(rng) for s in strategies)
+                    try:
+                        fn(*args)
+                    except Exception as exc:
+                        raise AssertionError(
+                            f"falsifying example #{i}: {fn.__name__}{args!r}"
+                        ) from exc
+
+            # pytest resolves fixtures through __wrapped__'s signature; the
+            # drawn arguments are not fixtures, so hide the original.
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco

@@ -1,0 +1,105 @@
+"""Backend dispatch layer: resolution, registry, and the golden-assembly
+parity guarantee — ``assemble()`` must produce identical (EllMatrix-equal)
+R and S graphs and contig stats under ``backend="reference"`` and
+``backend="pallas"`` (interpret mode on CPU)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.assembly.pipeline import PipelineConfig, assemble
+from repro.assembly.simulate import simulate_genome, simulate_reads
+from repro.core.backend import (
+    available_backends,
+    dispatch,
+    resolve_backend,
+    resolve_interpret,
+)
+from repro.core.semiring import minplus_orient_semiring as SR
+from repro.core.spmat import ell_equal, from_coo
+from repro.core.transitive_reduction import transitive_reduction_fused
+
+
+def _sim():
+    rng = np.random.default_rng(3)
+    g = simulate_genome(rng, 3000)
+    return simulate_reads(g, depth=8, mean_len=400, std_len=60,
+                          error_rate=0.02, seed=4)
+
+
+def _cfg(backend):
+    return PipelineConfig(
+        m_capacity=1 << 15, upper=48, read_capacity=64, overlap_capacity=32,
+        r_capacity=24, band=17, max_steps=512, align_chunk=1024, xdrop=25,
+        backend=backend,
+    )
+
+
+@pytest.fixture(scope="module")
+def both_results():
+    rs = _sim()
+    return (
+        assemble(rs.codes, rs.lengths, _cfg("reference")),
+        assemble(rs.codes, rs.lengths, _cfg("pallas")),
+    )
+
+
+def test_resolution_and_registry():
+    assert resolve_backend("reference") == "reference"
+    assert resolve_backend("pallas") == "pallas"
+    expected = "pallas" if jax.default_backend() == "tpu" else "reference"
+    assert resolve_backend("auto") == expected
+    assert resolve_interpret("auto") == (jax.default_backend() != "tpu")
+    assert resolve_interpret(False) is False
+    with pytest.raises(ValueError):
+        resolve_backend("cuda")
+    for op in ("xdrop_extend", "minplus_dense"):
+        assert available_backends(op) == ("pallas", "reference")
+        assert callable(dispatch(op, "reference"))
+        assert callable(dispatch(op, "pallas"))
+    with pytest.raises(KeyError):
+        dispatch("no_such_op", "reference")
+
+
+def test_golden_assembly_backend_parity(both_results):
+    res_ref, res_pal = both_results
+    assert res_ref.stats["backend"] == "reference"
+    assert res_pal.stats["backend"] == "pallas"
+    assert ell_equal(res_ref.r_graph, res_pal.r_graph)
+    assert ell_equal(res_ref.s_graph, res_pal.s_graph)
+    assert res_ref.stats["contigs"] == res_pal.stats["contigs"]
+    for key in ("n_aligned", "n_passed", "nnz_R", "nnz_S", "tr_iterations"):
+        assert res_ref.stats[key] == res_pal.stats[key], key
+
+
+def test_alignment_candidates_compacted(both_results):
+    """The alignment stage must evaluate the compacted bucket, not all
+    n × overlap_capacity ELL slots."""
+    for res in both_results:
+        total = res.stats["align_candidates"]
+        bucket = res.stats["align_bucket"]
+        live = res.stats["n_aligned"]
+        assert total == res.stats["n_reads"] * 32  # n × overlap_capacity
+        assert bucket < total
+        assert live <= bucket < 2 * max(live, 1)  # next pow2 of live count
+
+
+def test_tr_backend_parity_on_random_graph():
+    rng = np.random.default_rng(11)
+    n, e = 24, 90
+    rows = rng.integers(0, n, e)
+    cols = rng.integers(0, n, e)
+    ok = rows != cols
+    combos = rng.integers(0, 4, e)
+    vals = np.full((e, 4), np.inf, np.float32)
+    vals[np.arange(e), combos] = rng.integers(1, 120, e)
+    r, _ = from_coo(
+        jnp.asarray(rows), jnp.asarray(cols), jnp.asarray(vals),
+        jnp.asarray(ok), n_rows=n, n_cols=n, capacity=12, semiring=SR,
+    )
+    s_ref, st_ref = transitive_reduction_fused(r, fuzz=60.0, backend="reference")
+    s_pal, st_pal = transitive_reduction_fused(r, fuzz=60.0, backend="pallas")
+    assert ell_equal(s_ref, s_pal)
+    assert int(st_ref.iterations) == int(st_pal.iterations)
+    assert int(st_ref.nnz_final) == int(st_pal.nnz_final)

@@ -4,7 +4,7 @@ from collections import Counter
 
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.assembly.counter import build_matrices, count_and_select
 from repro.assembly.kmers import encode_seq, extract_kmers

@@ -6,6 +6,8 @@ import pytest
 
 from _dist_helpers import run_with_devices
 
+pytestmark = pytest.mark.dist  # deselect quickly with -m "not dist"
+
 SETUP = """
 import numpy as np, jax, jax.numpy as jnp
 from repro.core.semiring import minplus_orient_semiring as SR

@@ -2,7 +2,7 @@
 
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.semiring import (
     minplus_orient_semiring as SR,
