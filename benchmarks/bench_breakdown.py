@@ -1,8 +1,10 @@
 """Fig. 5-8 analogue: per-stage runtime breakdown of the pipeline
-(CountKmer / CreateSpMat / SpGEMM / Alignment / BuildR / TrReduction),
-with a backend axis: the reference row set uses the jnp oracles, the pallas
-row set routes the hot ops (x-drop extension, min-plus squares) through the
-Pallas kernels via the dispatch layer (compiled on TPU, interpret elsewhere).
+(CountKmer / CreateSpMat / SpGEMM / Alignment / BuildR / TrReduction /
+Contigs), with a backend axis: the reference row set uses the jnp oracles
+and the host contig walk, the pallas row set routes the hot ops (x-drop
+extension, min-plus squares) through the Pallas kernels via the dispatch
+layer (compiled on TPU, interpret elsewhere) and runs the device contig
+path (DESIGN.md §2.7).
 
 Standalone: ``python -m benchmarks.bench_breakdown --backend pallas``.
 """
@@ -33,6 +35,15 @@ def run(backends=("reference", "pallas")):
             (f"breakdown[{backend}]/{k}", v * 1e6,
              f"frac={v / total:.3f};live_pairs={live}/{cand}")
             for k, v in res.timings.items()
+        )
+        cs = res.stats["contigs"]
+        rows.append(
+            (f"breakdown[{backend}]/contig_stats",
+             res.timings["Contigs"] * 1e6,
+             f"n={cs['n_contigs']};n50={cs['n50']};l50={cs['l50']};"
+             f"mean={cs['mean_length']:.0f};"
+             f"branch_cut={res.stats['n_branch_cut']};"
+             f"cc_iters={res.stats['cc_iterations']}")
         )
     return rows
 

@@ -1,0 +1,85 @@
+"""Contigs-stage race: host walk (reference) vs device path (DESIGN.md §2.7).
+
+String graphs are synthesized directly — long unitig chains with their
+reverse-complement twins, a sprinkle of branch vertices, and isolated reads —
+so the sweep isolates contig generation from the rest of the pipeline.
+
+Standalone: ``python -m benchmarks.bench_contigs --backend pallas``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _string_graph(n, seed):
+    """Chain-structured string matrix over n reads: consecutive dovetails
+    (plus complements), a branch every 64 reads, and every 16th read left
+    fully edge-free so the isolated-singleton path is exercised too."""
+    from repro.assembly.contig_gen import string_matrix_from_edges
+
+    def iso(r):
+        return r % 16 == 15
+
+    rng = np.random.default_rng(seed)
+    edges = []
+    for i in range(n - 1):
+        suf = int(rng.integers(20, 80))
+        if not (iso(i) or iso(i + 1)):
+            edges.append((i, i + 1, 0, 0, suf))
+            edges.append((i + 1, i, 1, 1, suf + 3))
+        if i % 64 == 0 and i + 2 < n and not (iso(i) or iso(i + 2)):
+            edges.append((i, i + 2, 0, 0, suf + 1))
+            edges.append((i + 2, i, 1, 1, suf + 4))
+    return string_matrix_from_edges(n, edges, capacity=8)
+
+
+def run(backends=("reference", "pallas"), sweep=(256, 1024, 4096)):
+    import jax
+
+    from repro.assembly.contig_gen import generate_contigs
+
+    rows = []
+    for n in sweep:
+        s = _string_graph(n, seed=n)
+        rng = np.random.default_rng(n + 1)
+        codes = rng.integers(0, 4, (n, 256)).astype(np.uint8)
+        lengths = rng.integers(150, 250, n).astype(np.int32)
+        base = None
+        for backend in backends:
+            def f():
+                return generate_contigs(s, codes, lengths, backend=backend)
+
+            cset = f()  # warm-up / compile
+            reps = 3
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                jax.block_until_ready(jax.tree.leaves(f().codes))
+            us = (time.perf_counter() - t0) / reps * 1e6
+            if backend == "reference":
+                base = us
+            derived = f"n_contigs={cset.n_contigs}"
+            if base is not None and backend != "reference":
+                derived += f";speedup_vs_reference={base / us:.1f}x"
+            rows.append((f"contigs[{backend}]/n{n}", us, derived))
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--backend", default="both",
+                   choices=["reference", "pallas", "both"])
+    ns = p.parse_args()
+    backends = (("reference", "pallas") if ns.backend == "both"
+                else (ns.backend,))
+    print("name,us_per_call,derived")
+    for name, us, derived in run(backends=backends):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -6,8 +6,8 @@ import sys
 
 def main() -> None:
     from . import (
-        bench_breakdown, bench_comm_model, bench_kernels, bench_overlap,
-        bench_scaling, bench_sparsity, bench_tr,
+        bench_breakdown, bench_comm_model, bench_contigs, bench_kernels,
+        bench_overlap, bench_scaling, bench_sparsity, bench_tr,
     )
 
     mods = [
@@ -18,6 +18,7 @@ def main() -> None:
         ("breakdown[Fig5-8]", bench_breakdown),
         ("overlap[Fig9]", bench_overlap),
         ("kernels", bench_kernels),
+        ("contigs", bench_contigs),
     ]
     print("name,us_per_call,derived")
     for label, mod in mods:

@@ -60,8 +60,9 @@ def main():
           f"TR iters={s['tr_iterations']} "
           f"nnz R->S {s['nnz_R']}->{s['nnz_S']}")
     cs = s["contigs"]
-    print(f"[contigs] n={cs['n_contigs']} N50={cs['n50']} "
-          f"longest={cs['longest']} total={cs['total_length']}")
+    print(f"[contigs] n={cs['n_contigs']} N50={cs['n50']} L50={cs['l50']} "
+          f"mean={cs['mean_length']:.0f} longest={cs['longest']} "
+          f"total={cs['total_length']}")
 
     longest = max(res.contigs, key=lambda c: c.length)
     rec = kmer_recall(longest.codes, genome)

@@ -28,10 +28,11 @@ def main():
         print(f"  {k:<12} {v:7.2f} s")
     print("\nstatistics (paper Table III analogues):")
     for k in ("c_density", "r_density", "s_density", "tr_iterations",
-              "n_contained"):
+              "n_contained", "n_branch_cut", "cc_iterations"):
         print(f"  {k:<15} {res.stats[k]}")
     cs = res.stats["contigs"]
-    print(f"\ncontigs: {cs['n_contigs']}  N50={cs['n50']}  "
+    print(f"\ncontigs: {cs['n_contigs']}  N50={cs['n50']}  L50={cs['l50']}  "
+          f"mean={cs['mean_length']:.0f}  "
           f"longest={cs['longest']} (genome={len(genome)})")
     longest = max(res.contigs, key=lambda c: c.length)
     print(f"longest contig head: {contig_str(longest)[:60]}...")

@@ -1,2 +1,3 @@
 # OLC assembly substrate: FASTA I/O, k-mer counting, read simulation,
-# x-drop alignment, contig extraction, and the Algorithm-1 pipeline.
+# x-drop alignment, contig generation (host walk + device path, DESIGN.md
+# §2.7), and the Algorithm-1 pipeline.

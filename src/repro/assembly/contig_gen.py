@@ -1,0 +1,423 @@
+"""Device-side contig generation (DESIGN.md §2.7).
+
+The Contigs stage of Algorithm 1, rebuilt as jittable array algorithms over
+the string matrix S — the approach of the diBELLA follow-up paper
+(*Distributed-Memory Parallel Contig Generation for De Novo Long-Read Genome
+Assembly*, Guidi et al. 2022), which expresses contig generation as sparse
+matrix operations so it can run on the same mesh as the SpGEMM and the
+transitive reduction:
+
+1. expand S into the 2n-vertex state graph (``core/components.expand_states``);
+2. branch-cut: keep edge u→v iff out-degree(u) == 1 and in-degree(v) == 1
+   (the per-vertex degree filter of the 2022 paper's algorithm) — kept edges
+   form disjoint paths and cycles;
+3. cut cycles at their minimum state (``break_cycles``), label unitigs with
+   pointer-doubling path components (``path_components``), order states
+   within each unitig by pointer-doubling rank (``chain_rank``);
+4. deduplicate reverse-complement twin chains (lexicographic canonical
+   representative), lay out each contig as (destination row, offset) per
+   state, and gather the oriented read suffixes into one padded
+   ``(n_contigs, max_len)`` uint8 tensor with a single batched scatter.
+
+No step loops over reads in Python; the only host interaction is reading four
+scalars (#chains, max chain length, #contigs, max contig length) to pick
+power-of-two padded shapes between the three jitted stages — the same
+host-sized/pow2-padded staging the alignment candidate compaction uses
+(DESIGN.md §2.6).
+
+Backend contract: the op ``contig_gen`` is registered with the dispatch layer
+(DESIGN.md §2.5).  ``"reference"`` is the host dict-and-loop walk in
+``assembly/contigs.py``; ``"pallas"`` is this device path (pure XLA array
+ops — it needs no hand-written kernel, but it is the implementation that
+runs on the accelerator/mesh, which is what the backend axis selects).  Both
+must produce identical contigs — asserted chain-by-chain by the golden
+parity suite in ``tests/test_contigs.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.backend import dispatch, register_op
+from ..core.components import (
+    break_cycles,
+    chain_rank,
+    degrees,
+    expand_states,
+    path_components,
+)
+from ..core.semiring import minplus_orient_semiring
+from ..core.spmat import EllMatrix, from_coo, next_pow2
+from .contigs import (
+    Contig,
+    extract_contig_chains,
+    materialize_contigs,
+    state_edges,
+)
+
+_BIG = jnp.int32(2**30)
+
+
+@dataclasses.dataclass
+class ContigSet:
+    """Batched contig tensors + the thin materialization layer.
+
+    ``codes``/``lengths``/``states`` rows beyond ``n_contigs`` are padding.
+    ``states`` holds the (read, strand) chain as state ids ``2·read+strand``
+    (−1 padded); singleton contigs have a single state ``2·read``."""
+
+    codes: Any  # (C, L) uint8
+    lengths: Any  # (C,) int32
+    states: Any  # (C, M) int32, -1 padded
+    n_contigs: int
+    stats: Dict[str, int]  # n_branch_cut, cc_iterations
+
+    def to_contigs(self) -> List[Contig]:
+        codes = np.asarray(self.codes)
+        lens = np.asarray(self.lengths)
+        states = np.asarray(self.states)
+        out: List[Contig] = []
+        for i in range(self.n_contigs):
+            ss = states[i][states[i] >= 0]
+            out.append(
+                Contig(
+                    reads=[(int(s) >> 1, int(s) & 1) for s in ss],
+                    length=int(lens[i]),
+                    codes=codes[i, : lens[i]].copy(),
+                )
+            )
+        return out
+
+
+def string_matrix_from_edges(n_reads, edges, *, capacity=8) -> EllMatrix:
+    """Build a MinPlus string matrix from an explicit edge list — test and
+    benchmark scaffolding.  ``edges``: iterable of ``(i, j, strand_i,
+    strand_j, suffix)`` directed state-graph edges."""
+    edges = list(edges)
+    if not edges:
+        edges = [(0, 0, 0, 0, 0)]
+        ok = jnp.zeros(1, bool)
+    else:
+        ok = jnp.ones(len(edges), bool)
+    arr = np.asarray(edges, np.int64)
+    e = arr.shape[0]
+    combo = 2 * arr[:, 2] + arr[:, 3]
+    vals = np.full((e, 4), np.inf, np.float32)
+    vals[np.arange(e), combo] = arr[:, 4]
+    mat, _ = from_coo(
+        jnp.asarray(arr[:, 0], jnp.int32),
+        jnp.asarray(arr[:, 1], jnp.int32),
+        jnp.asarray(vals),
+        ok,
+        n_rows=n_reads,
+        n_cols=n_reads,
+        capacity=capacity,
+        semiring=minplus_orient_semiring,
+    )
+    return mat
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: state graph, branch cut, components, rank — fully static shapes.
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _chain_state(s: EllMatrix):
+    g = expand_states(s)
+    n2 = g.n_cols
+    out_deg, in_deg = degrees(g)
+
+    # branch cut: keep u→v iff out_deg(u)==1 and in_deg(v)==1.  For rows with
+    # out_deg==1 the single target/suffix fall out of a masked max/sum.
+    tgt = jnp.max(jnp.where(g.mask, g.cols, -1), axis=1)
+    suf = jnp.sum(jnp.where(g.mask, g.vals, 0.0), axis=1)
+    tgt_safe = jnp.where(tgt >= 0, tgt, 0)
+    kept = (out_deg == 1) & (tgt >= 0) & (in_deg[tgt_safe] == 1)
+    succ0 = jnp.where(kept, tgt, -1)
+    n_branch_cut = jnp.sum(out_deg) - jnp.sum(kept).astype(jnp.int32)
+
+    # pred + in-suffix: in_deg(target)==1 makes the scatter single-writer
+    scat = jnp.where(kept, succ0, n2)
+    ids = jnp.arange(n2, dtype=jnp.int32)
+    pred0 = jnp.full(n2 + 1, -1, jnp.int32).at[scat].set(ids)[:n2]
+    insuf = jnp.zeros(n2 + 1, jnp.float32).at[scat].set(suf)[:n2]
+
+    succ, pred, _ = break_cycles(succ0, pred0)
+
+    # unitig labels (components of the kept-edge path graph) + in-chain rank.
+    # path_components' doubling is O(log n) for any id permutation along the
+    # chain (generic min-label propagation needs Θ(n) rounds on permuted
+    # paths and would truncate long unitigs).
+    labels, cc_iters = path_components(succ, pred)
+    head, rank, _ = chain_rank(pred)
+    eligible = out_deg[head] > 0  # a chain emits iff its head has out-edges
+
+    # group states by (label, rank): eligible chains first, label-ascending
+    order = jnp.lexsort((rank, jnp.where(eligible, labels, _BIG)))
+    state_s = order.astype(jnp.int32)
+    elig_s = eligible[order]
+    lab_s = labels[order]
+    rank_s = rank[order]
+    prev = jnp.where(jnp.arange(n2) == 0, -1, jnp.roll(lab_s, 1))
+    new_chain = elig_s & (lab_s != prev)
+    chain_idx_s = jnp.cumsum(new_chain.astype(jnp.int32)) - 1
+
+    has_edge = (out_deg + in_deg).reshape(-1, 2).sum(axis=1) > 0  # per read
+    return {
+        "state_s": state_s,
+        "elig_s": elig_s,
+        "rank_s": rank_s,
+        "chain_idx_s": chain_idx_s,
+        "new_chain": new_chain,
+        "insuf": insuf,
+        "has_edge": has_edge,
+        "n_chains": jnp.sum(new_chain).astype(jnp.int32),
+        "max_chain": jnp.max(jnp.where(elig_s, rank_s, -1)) + 1,
+        "n_branch_cut": n_branch_cut,
+        "cc_iterations": cc_iters,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: chain rows, RC-twin dedup, per-piece destination layout.
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("ca", "m"))
+def _chain_layout(st, lengths, contained, *, ca, m):
+    state_s, elig_s = st["state_s"], st["elig_s"]
+    rank_s, chain_idx_s = st["rank_s"], st["chain_idx_s"]
+    n2 = state_s.shape[0]
+
+    chain_safe = jnp.where(elig_s, chain_idx_s, ca)
+    rows = (
+        jnp.full((ca + 1, m), -1, jnp.int32)
+        .at[chain_safe, jnp.minimum(rank_s, m - 1)]
+        .set(state_s)[:ca]
+    )
+    valid = rows[:, 0] >= 0
+    chain_len = jnp.sum(rows >= 0, axis=1).astype(jnp.int32)
+    heads = rows[:, 0]
+    tail = jnp.take_along_axis(
+        rows, jnp.maximum(chain_len - 1, 0)[:, None], axis=1
+    )[:, 0]
+
+    # RC-twin dedup: chain c = [u0..uk] is dropped iff its twin
+    # t = [uk^1..u0^1] is also an emitted chain and t < c lexicographically.
+    # Heads are unique, so "t emitted" ⇔ the chain headed by tail^1 equals t.
+    tcol = jnp.clip(chain_len[:, None] - 1 - jnp.arange(m)[None, :], 0, m - 1)
+    tw = jnp.take_along_axis(rows, tcol, axis=1)
+    tw = jnp.where(jnp.arange(m)[None, :] < chain_len[:, None], tw ^ 1, -1)
+    chain_of_head = (
+        jnp.full(n2 + 1, -1, jnp.int32)
+        .at[jnp.where(valid, heads, n2)]
+        .set(jnp.arange(ca, dtype=jnp.int32))[:n2]
+    )
+    twin_head = jnp.clip(jnp.where(valid, tail ^ 1, 0), 0, n2 - 1)
+    cand = jnp.where(valid, chain_of_head[twin_head], -1)
+    cand_safe = jnp.where(cand >= 0, cand, 0)
+    is_twin = (
+        (cand >= 0)
+        & (chain_len[cand_safe] == chain_len)
+        & jnp.all(rows[cand_safe] == tw, axis=1)
+    )
+    neq = (rows != tw) & (jnp.arange(m)[None, :] < chain_len[:, None])
+    first = jnp.argmax(neq, axis=1)
+    a = jnp.take_along_axis(rows, first[:, None], axis=1)[:, 0]
+    b = jnp.take_along_axis(tw, first[:, None], axis=1)[:, 0]
+    keep = valid & ~(is_twin & jnp.any(neq, axis=1) & (b < a))
+
+    contig_row_of_chain = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    n_chain_contigs = jnp.sum(keep).astype(jnp.int32)
+
+    # piece layout in sorted state space: width (bases this state appends),
+    # destination offset (segmented prefix sum within the chain).  Gathers
+    # through chain ids are clip+mask (elig_s guards range) rather than
+    # dummy-slot concatenation, which GSPMD mis-partitions on sharded inputs.
+    chain_clip = jnp.clip(chain_idx_s, 0, ca - 1)
+    piece_on = elig_s & keep[chain_clip]
+    read_len = lengths[state_s >> 1]
+    width = jnp.where(
+        rank_s == 0,
+        read_len,
+        # a state appends at most its whole read (clamp keeps the backends
+        # in agreement on degenerate suffix > length edges)
+        jnp.minimum(jnp.round(st["insuf"][state_s]).astype(jnp.int32), read_len),
+    )
+    width = jnp.where(piece_on, width, 0)
+    # segmented exclusive prefix sum of widths within each chain, built from
+    # plain cumsum + scatter-add (associative_scan mis-lowers on sharded
+    # inputs): global exclusive sum minus the chain's base offset
+    excl = jnp.cumsum(width) - width
+    seg_total = jnp.zeros(ca + 1, jnp.int32).at[chain_safe].add(width)[:ca]
+    seg_base = jnp.cumsum(seg_total) - seg_total
+    dst = jnp.where(piece_on, excl - seg_base[chain_clip], 0)
+    piece_row = jnp.where(piece_on, contig_row_of_chain[chain_clip], 0)
+    end = seg_total  # contig length = total width of its chain
+
+    # isolated reads (no state-graph edges at all) → singleton contigs
+    iso = ~st["has_edge"] & ~contained
+    iso_row = n_chain_contigs + jnp.cumsum(iso.astype(jnp.int32)) - 1
+    n_contigs = n_chain_contigs + jnp.sum(iso).astype(jnp.int32)
+    max_len = jnp.maximum(
+        jnp.max(jnp.where(keep, end, 0)), jnp.max(jnp.where(iso, lengths, 0))
+    )
+    return {
+        "rows": rows,
+        "keep": keep,
+        "contig_row_of_chain": contig_row_of_chain,
+        "contig_len": end,
+        "piece_on": piece_on,
+        "piece_row": piece_row,
+        "dst": dst,
+        "width": width,
+        "iso": iso,
+        "iso_row": iso_row,
+        "n_contigs": n_contigs,
+        "max_len": max_len,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Stage 3: batched oriented-suffix gather into the padded contig tensor.
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("c", "l"))
+def _gather_codes(st, lay, codes, lengths, *, c, l):
+    n, lr = codes.shape
+
+    def scatter(out, state, take, dstoff, rowidx, on):
+        # piece = last `take` bases of the oriented read: forward reads index
+        # len−take+b; reverse-complement reads index take−1−b and complement
+        r = state >> 1
+        rc = (state & 1)[:, None] == 1
+        ln = lengths[r][:, None]
+        tk = take[:, None]
+        b = jnp.arange(lr)[None, :]
+        idx = jnp.where(rc, tk - 1 - b, ln - tk + b)
+        base = codes[r[:, None], jnp.clip(idx, 0, lr - 1)]
+        base = jnp.where(rc, 3 - base, base)
+        ok = on[:, None] & (b < tk)
+        return out.at[
+            jnp.where(ok, rowidx[:, None], c), jnp.where(ok, dstoff[:, None] + b, l)
+        ].set(jnp.where(ok, base, 0))
+
+    # two piece families share one buffer: the 2n chain states (masked) and
+    # the n isolated reads (kept as separate scatters — concatenating
+    # differently-sharded operands trips GSPMD)
+    out = jnp.zeros((c + 1, l + 1), jnp.uint8)
+    out = scatter(
+        out, st["state_s"], lay["width"], lay["dst"], lay["piece_row"],
+        lay["piece_on"],
+    )
+    out = scatter(
+        out,
+        2 * jnp.arange(n, dtype=jnp.int32),
+        jnp.where(lay["iso"], lengths, 0),
+        jnp.zeros(n, jnp.int32),
+        lay["iso_row"],
+        lay["iso"],
+    )[:c, :l]
+
+    keep, iso = lay["keep"], lay["iso"]
+    crow = jnp.where(keep, lay["contig_row_of_chain"], c)
+    irow = jnp.where(iso, lay["iso_row"], c)
+    out_len = (
+        jnp.zeros(c + 1, jnp.int32)
+        .at[crow]
+        .set(lay["contig_len"])
+        .at[irow]
+        .set(jnp.where(iso, lengths, 0))[:c]
+    )
+    m = lay["rows"].shape[1]
+    out_states = (
+        jnp.full((c + 1, m), -1, jnp.int32)
+        .at[crow, :]
+        .set(lay["rows"])
+        .at[irow, 0]
+        .set(2 * jnp.arange(n))[:c]
+    )
+    return out, out_len, out_states
+
+
+# ---------------------------------------------------------------------------
+# Backends + dispatch entry point.
+# ---------------------------------------------------------------------------
+
+
+def _device_contig_gen(s_mat, codes, lengths, contained=None) -> ContigSet:
+    codes = jnp.asarray(codes, jnp.uint8)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    n = codes.shape[0]
+    contained = (
+        jnp.zeros(n, bool) if contained is None else jnp.asarray(contained, bool)
+    )
+    st = _chain_state(s_mat)
+    ca = next_pow2(int(st["n_chains"]))
+    m = next_pow2(int(st["max_chain"]))
+    lay = _chain_layout(st, lengths, contained, ca=ca, m=m)
+    c = next_pow2(int(lay["n_contigs"]))
+    l = next_pow2(int(lay["max_len"]))
+    out_codes, out_len, out_states = _gather_codes(
+        st, lay, codes, lengths, c=c, l=l
+    )
+    return ContigSet(
+        codes=out_codes,
+        lengths=out_len,
+        states=out_states,
+        n_contigs=int(lay["n_contigs"]),
+        stats={
+            "n_branch_cut": int(st["n_branch_cut"]),
+            "cc_iterations": int(st["cc_iterations"]),
+        },
+    )
+
+
+def _reference_contig_gen(s_mat, codes, lengths, contained=None) -> ContigSet:
+    """Host walk (assembly/contigs.py) packed into the ContigSet contract."""
+    codes = np.asarray(codes)
+    lengths = np.asarray(lengths)
+    edges = state_edges(s_mat)
+    chains, n_branch_cut = extract_contig_chains(s_mat, _edges=edges)
+    contigs = materialize_contigs(chains, edges[2], codes, lengths, contained)
+    c = len(contigs)
+    lmax = max((ct.length for ct in contigs), default=0)
+    mmax = max((len(ct.reads) for ct in contigs), default=1)
+    out = np.zeros((c, lmax), np.uint8)
+    lens = np.zeros(c, np.int32)
+    states = np.full((c, mmax), -1, np.int32)
+    for i, ct in enumerate(contigs):
+        out[i, : ct.length] = ct.codes
+        lens[i] = ct.length
+        for t, (r, s) in enumerate(ct.reads):
+            states[i, t] = 2 * r + s
+    return ContigSet(
+        codes=out,
+        lengths=lens,
+        states=states,
+        n_contigs=c,
+        stats={"n_branch_cut": int(n_branch_cut), "cc_iterations": 0},
+    )
+
+
+# The "pallas" slot of the contig_gen op is the device array path: it is the
+# implementation that runs on-accelerator (pure XLA, no hand kernel needed),
+# which is exactly what the backend axis selects (DESIGN.md §2.5/§2.7).
+register_op("contig_gen", "reference", _reference_contig_gen)
+register_op("contig_gen", "pallas", _device_contig_gen)
+
+
+def generate_contigs(
+    s_mat, codes, lengths, contained=None, *, backend: str = "auto"
+) -> ContigSet:
+    """Contigs stage entry point: dispatch the registered ``contig_gen``
+    backend (DESIGN.md §2.5) on string matrix S."""
+    return dispatch("contig_gen", backend)(s_mat, codes, lengths, contained)

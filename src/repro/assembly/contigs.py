@@ -2,11 +2,28 @@
 
 A walk state is (read, strand); edge (i→j, strands (a, b), suffix ℓ) connects
 state (i, a) to (j, b) and appends the last ℓ bases of oriented-j to the
-contig.  Unitigs are maximal chains through states with in-degree = out-degree
-= 1; each unitig and its reverse-complement twin are emitted once.  Host-side
-(graph walking is the tiny tail of the pipeline; the paper stops at the
-string graph, this is the minimal consensus-free "C" to make examples
-end-to-end).
+contig.  This module is the **host-side reference backend** of the Contigs
+stage (``assembly/contig_gen.py`` holds the device path; both implement the
+same canonical partition and must produce identical contigs — asserted by the
+golden parity suite in ``tests/test_contigs.py``).
+
+Canonical unitig partition (DESIGN.md §2.7)
+-------------------------------------------
+An edge u→v of the state graph is *kept* iff out-degree(u) == 1 and
+in-degree(v) == 1 (the branch-cut rule of the 2022 contig-generation paper:
+branching vertices terminate chains on both sides).  Kept edges form disjoint
+simple paths and cycles; cycles are cut at their minimum-id state, which
+becomes the head.  One contig is emitted per chain whose head has at least
+one outgoing edge in the *original* state graph.  The rule is purely local,
+so the partition — unlike a visited-set walk — does not depend on traversal
+order, which is what lets the device backend reproduce it exactly.
+
+Reverse-complement twins: every chain c = [u0..uk] has a formal twin
+t = [uk^1..u0^1] (strand-flipped reversal).  c is dropped iff t is *also* an
+emitted chain and t < c lexicographically — i.e. each twin pair is emitted
+once, as its lexicographically smaller representative.  (Keying on the chain
+itself, not on the ``frozenset`` of read ids, means two distinct chains that
+happen to visit the same reads in different orders both survive.)
 """
 
 from __future__ import annotations
@@ -32,6 +49,8 @@ class ContigStats:
     total_length: int
     n50: int
     longest: int
+    l50: int
+    mean_length: float
 
 
 def _oriented(codes_row: np.ndarray, length: int, strand: int) -> np.ndarray:
@@ -39,20 +58,16 @@ def _oriented(codes_row: np.ndarray, length: int, strand: int) -> np.ndarray:
     return (3 - r[::-1]) if strand else r
 
 
-def extract_contigs(s_mat, codes, lengths, contained=None) -> List[Contig]:
-    """s_mat: EllMatrix string graph (MinPlus 4-vector values).  Reads marked
-    ``contained`` are redundant (they lie inside another read) and are not
-    emitted as singleton contigs."""
+def state_edges(s_mat):
+    """Host-side state-graph expansion: ``(out_edges, in_deg, has_edge)``
+    where ``out_edges[u] = [(v, suffix), ...]`` over states ``u = 2·read +
+    strand`` and ``has_edge`` is per *read* (any edge on either strand, in
+    either direction)."""
     cols = np.asarray(s_mat.cols)
     vals = np.asarray(s_mat.vals)
-    codes = np.asarray(codes)
-    lengths = np.asarray(lengths)
     n = cols.shape[0]
-
-    # state graph over (read, strand)
-    out_edges: Dict[Tuple[int, int], List] = {}
-    in_deg: Dict[Tuple[int, int], int] = {}
-    used_read = np.zeros(n, bool)
+    out_edges: Dict[int, List] = {}
+    in_deg: Dict[int, int] = {}
     has_edge = np.zeros(n, bool)
     for i in range(n):
         for q in range(cols.shape[1]):
@@ -64,61 +79,118 @@ def extract_contigs(s_mat, codes, lengths, contained=None) -> List[Contig]:
                 if not np.isfinite(suf):
                     continue
                 a, b = combo >> 1, combo & 1
-                out_edges.setdefault((i, a), []).append((j, b, int(suf)))
-                in_deg[(j, b)] = in_deg.get((j, b), 0) + 1
+                out_edges.setdefault(2 * i + a, []).append((2 * j + b, int(suf)))
+                in_deg[2 * j + b] = in_deg.get(2 * j + b, 0) + 1
                 has_edge[i] = has_edge[j] = True
+    return out_edges, in_deg, has_edge
 
-    def linear(state):
-        return len(out_edges.get(state, [])) == 1 and in_deg.get(state, 0) == 1
+
+def extract_contig_chains(s_mat, _edges=None):
+    """Canonical unitig partition of the state graph (see module docstring).
+
+    Returns ``(chains, n_branch_cut)`` where each chain is a list of
+    ``(state, in_suffix)`` pairs (``in_suffix`` of the head is 0), chains are
+    sorted by their minimum state id, and reverse-complement twins are
+    already deduplicated.  ``_edges`` takes a precomputed ``state_edges``
+    result to avoid re-expanding the graph."""
+    out_edges, in_deg, _ = _edges if _edges is not None else state_edges(s_mat)
+
+    # branch-cut rule: keep u→v iff out_deg(u) == 1 and in_deg(v) == 1
+    succ: Dict[int, Tuple[int, int]] = {}
+    pred: Dict[int, int] = {}
+    n_branch_cut = 0
+    for u, es in out_edges.items():
+        if len(es) == 1 and in_deg.get(es[0][0], 0) == 1:
+            v, suf = es[0]
+            succ[u] = (v, suf)
+            pred[v] = u
+        else:
+            n_branch_cut += len(es)
+
+    # cut cycles at their minimum state (canonical head)
+    seen: set = set()
+    for u in list(succ):
+        if u in seen:
+            continue
+        path = []
+        on_path: set = set()
+        cur = u
+        while cur in succ and cur not in seen and cur not in on_path:
+            path.append(cur)
+            on_path.add(cur)
+            cur = succ[cur][0]
+        seen.update(on_path)
+        if cur in on_path:  # found a cycle; cut the edge entering its min
+            cyc = path[path.index(cur):]
+            mn = min(cyc)
+            prv = pred.pop(mn)
+            del succ[prv]
+
+    # chains from heads (no kept in-edge); emit iff head has out-edges
+    states = set(out_edges) | set(in_deg)
+    emitted: List[List[Tuple[int, int]]] = []
+    for h in states:
+        if h in pred or h not in out_edges:
+            continue
+        chain = [(h, 0)]
+        cur = h
+        while cur in succ:
+            v, suf = succ[cur]
+            chain.append((v, suf))
+            cur = v
+        emitted.append(chain)
+
+    # RC-twin dedup: drop c iff its twin is also emitted and twin < c
+    keys = {tuple(s for s, _ in c): c for c in emitted}
+    kept = []
+    for key, c in keys.items():
+        twin = tuple(s ^ 1 for s in reversed(key))
+        if twin in keys and twin < key:
+            continue
+        kept.append(c)
+    kept.sort(key=lambda c: min(s for s, _ in c))
+    return kept, n_branch_cut
+
+
+def extract_contigs(s_mat, codes, lengths, contained=None) -> List[Contig]:
+    """s_mat: EllMatrix string graph (MinPlus 4-vector values).  Reads marked
+    ``contained`` are redundant (they lie inside another read) and are not
+    emitted as singleton contigs."""
+    edges = state_edges(s_mat)
+    chains, _ = extract_contig_chains(s_mat, _edges=edges)
+    return materialize_contigs(chains, edges[2], codes, lengths, contained)
+
+
+def materialize_contigs(
+    chains, has_edge, codes, lengths, contained=None
+) -> List[Contig]:
+    """Turn chains of ``(state, in_suffix)`` into sequence-bearing contigs and
+    append the isolated-read singletons."""
+    codes = np.asarray(codes)
+    lengths = np.asarray(lengths)
+    n = codes.shape[0]
 
     contigs: List[Contig] = []
-    visited = set()
-
-    def walk(start):
-        chain = [start]
-        seq = [_oriented(codes[start[0]], lengths[start[0]], start[1])]
-        cur = start
-        while True:
-            outs = out_edges.get(cur, [])
-            if len(outs) != 1:
-                break
-            j, b, suf = outs[0]
-            nxt = (j, b)
-            if in_deg.get(nxt, 0) != 1 or nxt in visited or nxt == start:
-                break
-            chain.append(nxt)
-            visited.add(nxt)
-            orient = _oriented(codes[j], lengths[j], b)
-            seq.append(orient[len(orient) - suf :] if suf > 0 else orient[:0])
-            cur = nxt
+    for chain in chains:
+        seq = []
+        for t, (state, suf) in enumerate(chain):
+            r, s = state >> 1, state & 1
+            orient = _oriented(codes[r], lengths[r], s)
+            if t == 0:
+                seq.append(orient)
+            else:
+                # a state appends at most its whole read (clamp keeps the
+                # backends in agreement on degenerate suffix > length edges)
+                suf = min(suf, len(orient))
+                seq.append(orient[len(orient) - suf:] if suf > 0 else orient[:0])
         full = np.concatenate(seq) if seq else np.zeros(0, np.uint8)
-        return Contig(reads=chain, length=len(full), codes=full)
-
-    # starts: states that are not mid-chain
-    states = set(out_edges) | set(in_deg)
-    for st in sorted(states):
-        if st in visited:
-            continue
-        if not linear(st):
-            if out_edges.get(st):
-                visited.add(st)
-                contigs.append(walk(st))
-            continue
-    # pure cycles / remaining linear chains
-    for st in sorted(states):
-        if st not in visited and out_edges.get(st):
-            visited.add(st)
-            contigs.append(walk(st))
-
-    # deduplicate reverse-complement twins (same read set)
-    seen = set()
-    uniq: List[Contig] = []
-    for c in contigs:
-        key = frozenset(r for r, _ in c.reads)
-        if key in seen:
-            continue
-        seen.add(key)
-        uniq.append(c)
+        contigs.append(
+            Contig(
+                reads=[(s >> 1, s & 1) for s, _ in chain],
+                length=len(full),
+                codes=full,
+            )
+        )
 
     # isolated reads (no edges at all) become singleton contigs
     cont = (
@@ -126,28 +198,32 @@ def extract_contigs(s_mat, codes, lengths, contained=None) -> List[Contig]:
     )
     for i in range(n):
         if not has_edge[i] and not cont[i]:
-            uniq.append(
+            contigs.append(
                 Contig(
                     reads=[(i, 0)],
                     length=int(lengths[i]),
                     codes=codes[i][: lengths[i]].copy(),
                 )
             )
-    return uniq
+    return contigs
 
 
 def contig_stats(contigs: List[Contig]) -> ContigStats:
     if not contigs:
-        return ContigStats(0, 0, 0, 0)
+        return ContigStats(0, 0, 0, 0, 0, 0.0)
     ls = sorted((c.length for c in contigs), reverse=True)
     total = sum(ls)
-    acc, n50 = 0, 0
-    for x in ls:
+    if total == 0:
+        # all-empty contigs: N50/L50 are undefined — report zeros explicitly
+        # rather than whatever the accumulation loop happens to leave behind
+        return ContigStats(len(ls), 0, 0, 0, 0, 0.0)
+    acc, n50, l50 = 0, 0, 0
+    for rank, x in enumerate(ls):
         acc += x
-        if acc >= total / 2:
-            n50 = x
+        if acc * 2 >= total:
+            n50, l50 = x, rank + 1
             break
-    return ContigStats(len(contigs), total, n50, ls[0])
+    return ContigStats(len(ls), total, n50, ls[0], l50, total / len(ls))
 
 
 def contig_str(c: Contig) -> str:

@@ -18,19 +18,19 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..core.backend import resolve_backend
 from ..core.semiring import overlap_semiring
 from ..core.spgemm import spgemm
-from ..core.spmat import map_row_blocks
+from ..core.spmat import map_row_blocks, next_pow2
 from ..core.string_graph import build_overlap_graph, classify_overlaps, drop_contained
 from ..core.transitive_reduction import (
     transitive_reduction,
     transitive_reduction_fused,
 )
 from . import alignment as al
-from .contigs import contig_stats, extract_contigs
+from .contig_gen import generate_contigs
+from .contigs import contig_stats
 from .counter import build_matrices, count_and_select
 from .kmers import extract_kmers, revcomp
 
@@ -72,6 +72,7 @@ class AssemblyResult:
     contigs: list
     stats: Dict[str, Any]
     timings: Dict[str, float]
+    contained: Any = None  # (n,) bool, reads dropped as contained
 
 
 def _tic(timings, key, t0, out=None):
@@ -149,7 +150,7 @@ def assemble(codes, lengths, cfg: PipelineConfig = PipelineConfig()) -> Assembly
     # the bucket (row-chunked), and scatter results back to slot order.
     e_total = int(pair_i.shape[0])
     n_live = int(jnp.sum(pv))
-    bucket = 1 << max(0, n_live - 1).bit_length()  # next pow2, ≥ 1
+    bucket = next_pow2(n_live)
     idx = jnp.nonzero(pv, size=bucket, fill_value=0)[0]
     live = jnp.arange(bucket) < n_live
 
@@ -226,15 +227,18 @@ def assemble(codes, lengths, cfg: PipelineConfig = PipelineConfig()) -> Assembly
     stats["nnz_S"] = int(s_mat.nnz())
     stats["s_density"] = stats["nnz_S"] / max(1, int(n))
 
-    # --- Contigs (host walk) ---
-    contigs = extract_contigs(
-        s_mat, np.asarray(codes), np.asarray(lengths), np.asarray(contained)
+    # --- Contigs (backend-dispatched: host walk or device path, §2.7) ---
+    cset = generate_contigs(
+        s_mat, codes, lengths, contained, backend=backend
     )
+    contigs = cset.to_contigs()
     cs = contig_stats(contigs)
-    _tic(timings, "Contigs", t0)
+    _tic(timings, "Contigs", t0, cset.codes)
     stats["contigs"] = dataclasses.asdict(cs)
+    stats["n_branch_cut"] = cset.stats["n_branch_cut"]
+    stats["cc_iterations"] = cset.stats["cc_iterations"]
 
     return AssemblyResult(
         r_graph=r_mat, s_graph=s_mat, contigs=contigs, stats=stats,
-        timings=timings,
+        timings=timings, contained=contained,
     )

@@ -26,6 +26,14 @@ from .spmat import (  # noqa: F401
     merge_sorted_rows,
     prune,
 )
+from .components import (  # noqa: F401
+    break_cycles,
+    chain_rank,
+    connected_components,
+    degrees,
+    expand_states,
+    path_components,
+)
 from .spgemm import spgemm, spgemm_masked, transpose  # noqa: F401
 from .string_graph import (  # noqa: F401
     OverlapClass,

@@ -34,6 +34,12 @@ Current ops
 ``minplus_dense``
     ``(a, b) -> n`` with ``a (M, K, 4)``, ``b (K, N, 4)``, ``n (M, N, 4)``
     f32; the orientation-resolved dense min-plus matmul of Algorithm 2.
+``contig_gen``
+    ``(s_mat, codes, lengths, contained) -> ContigSet`` — the Contigs stage
+    (DESIGN.md §2.7): ``reference`` is the host walk in
+    ``assembly/contigs.py``, ``pallas`` the device array path in
+    ``assembly/contig_gen.py``; both must produce identical contigs
+    (asserted chain-by-chain by ``tests/test_contigs.py``).
 """
 
 from __future__ import annotations
@@ -81,9 +87,12 @@ def available_backends(op: str) -> Tuple[str, ...]:
 
 
 def _ensure_registered() -> None:
-    # Default implementations live in repro.kernels; importing it triggers
-    # their register_op calls.  Lazy so core stays import-light.
+    # Default implementations live in repro.kernels (xdrop_extend,
+    # minplus_dense) and repro.assembly.contig_gen (contig_gen); importing
+    # them triggers their register_op calls.  Lazy so core stays import-light
+    # and the core → kernels/assembly → core cycle stays broken.
     from .. import kernels  # noqa: F401
+    from ..assembly import contig_gen  # noqa: F401
 
 
 def dispatch(op: str, backend: str = "auto") -> Callable:

@@ -1,0 +1,240 @@
+"""Device-side graph primitives for contig generation (DESIGN.md §2.7).
+
+The 2022 follow-up to diBELLA 2D (Guidi et al., *Distributed-Memory Parallel
+Contig Generation for De Novo Long-Read Genome Assembly*) shows that the last
+host-sequential stage of the pipeline — walking unitigs out of the string
+matrix S — is itself expressible as sparse array algebra: branch pruning is an
+elementwise degree filter, unitig membership is connected components, and the
+in-chain order is a pointer-doubling (log-step) traversal.  This module holds
+those primitives; `assembly/contig_gen.py` composes them into the Contigs
+stage.
+
+Everything here is jit-compatible with static shapes:
+
+* ``expand_states`` — re-encodes the n×n MinPlus 4-vector string matrix as the
+  2n-vertex *state graph* (vertex ``2·read + strand``) in ELL form with scalar
+  suffix values.  This is the array analogue of the host walk's
+  ``(read, strand)`` dict keys.
+* ``degrees`` — out-degree per row, in-degree per column (scatter-add).
+* ``connected_components`` — min-label propagation with pointer-jumping
+  shortcuts (Shiloach–Vishkin style hooking) over an ELL adjacency treated as
+  undirected; runs as a ``lax.while_loop`` with a convergence test and
+  returns the iteration count.
+* ``break_cycles`` / ``chain_rank`` / ``path_components`` — pointer doubling
+  over a *functional* successor/predecessor pair (each vertex has ≤1 kept
+  out-edge and ≤1 kept in-edge, so components are disjoint paths and
+  cycles): ``break_cycles`` cuts each cycle at its minimum-id vertex (making
+  it the chain head), ``chain_rank`` resolves every vertex's chain head and
+  rank (distance from the head), and ``path_components`` labels each chain
+  with its minimum vertex — all in O(log n) doubling rounds regardless of
+  how vertex ids are permuted along the chains.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .spmat import EllMatrix, NO_COL
+
+_BIG = jnp.int32(2**30)
+
+
+def _log2_ceil(n: int) -> int:
+    return max(1, int(n - 1).bit_length())
+
+
+def expand_states(s: EllMatrix) -> EllMatrix:
+    """Expand an n×n MinPlus-4-vector string matrix into its 2n×2n state
+    graph: combo ``2a+b`` of edge ``i→j`` becomes the scalar-valued edge
+    ``2i+a → 2j+b`` (value = suffix length, slot masked where +inf).
+
+    Rows are recompacted to the EllMatrix sorted-ascending invariant.  The
+    output capacity is 2K: each of the K source slots contributes at most two
+    targets (``b ∈ {0, 1}``) per source strand ``a``.
+    """
+    n, k = s.cols.shape
+    # vals (n, K, 4) -> (n, 2, K, 2): [read, a, slot, b]
+    v4 = jnp.transpose(s.vals.reshape(n, k, 2, 2), (0, 2, 1, 3))
+    j = s.cols[:, None, :, None]  # broadcast to [read, a, slot, b]
+    tgt = 2 * j + jnp.arange(2)[None, None, None, :]
+    cols = jnp.where((j >= 0) & jnp.isfinite(v4), tgt, NO_COL)
+    cols = cols.reshape(2 * n, 2 * k).astype(jnp.int32)
+    vals = v4.reshape(2 * n, 2 * k)
+    # recompact: sort each row by column, invalid slots (key=BIG) to the end
+    key = jnp.where(cols >= 0, cols, _BIG)
+    order = jnp.argsort(key, axis=1)
+    sorted_key = jnp.take_along_axis(key, order, axis=1)
+    out_cols = jnp.where(sorted_key < _BIG, sorted_key, NO_COL)
+    out_vals = jnp.take_along_axis(vals, order, axis=1)
+    out_vals = jnp.where(out_cols >= 0, out_vals, jnp.inf)
+    return EllMatrix(cols=out_cols, vals=out_vals, n_cols=2 * n)
+
+
+def degrees(adj: EllMatrix) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(out_deg, in_deg) of an ELL adjacency, both (n_rows,) int32.  Assumes
+    square adjacency (n_cols == n_rows), as produced by ``expand_states``."""
+    m = adj.mask
+    out_deg = jnp.sum(m, axis=1).astype(jnp.int32)
+    safe = jnp.where(m, adj.cols, adj.n_cols)
+    in_deg = (
+        jnp.zeros(adj.n_cols + 1, jnp.int32)
+        .at[safe.reshape(-1)]
+        .add(m.reshape(-1).astype(jnp.int32))[: adj.n_cols]
+    )
+    return out_deg, in_deg
+
+
+def connected_components(
+    adj: EllMatrix, *, max_iters: int | None = None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Minimum-label connected components of an ELL adjacency, treated as
+    undirected (labels hook across ``u→v`` in both directions).
+
+    Each round does one hook (gather-min over out-neighbours + scatter-min
+    over in-neighbours) followed by one pointer-jump shortcut (``l ← l[l]``);
+    the loop exits when labels stop changing.  The shortcut makes typical
+    (id-correlated) graphs converge in O(log n) rounds, but on adversarial
+    vertex orderings — e.g. a path whose minimum sits mid-chain behind
+    non-monotone labels — propagation needs Θ(n) rounds, so the default cap
+    is ``n`` (correctness over speed; the convergence test exits early).
+    For the disjoint-path graphs of the contig stage use
+    :func:`path_components`, which is O(log n) unconditionally.  Returns
+    ``(labels (n,) int32 — min vertex id per component, n_iterations)``.
+    """
+    n = adj.cols.shape[0]
+    if max_iters is None:
+        max_iters = n
+    m = adj.mask
+    mf = m.reshape(-1)
+    # Masked slots are routed to index 0 with a ⊕-identity (_BIG) value, so
+    # both the gather and the scatter-min are no-ops there; this avoids
+    # concatenating a dummy slot, which GSPMD mis-partitions when the inputs
+    # arrive sharded (the contig path runs this on mesh-resident arrays).
+    safe = jnp.clip(jnp.where(m, adj.cols, 0), 0, n - 1)
+    sf = safe.reshape(-1)
+
+    def cond(carry):
+        _, changed, it = carry
+        return changed & (it < max_iters)
+
+    def body(carry):
+        l, _, it = carry
+        # hook: pull the min label over out-neighbours...
+        pulled = jnp.min(jnp.where(m, l[safe], _BIG), axis=1)
+        l1 = jnp.minimum(l, pulled)
+        # ...and push labels along edges (covers the reverse direction)
+        push = jnp.where(mf, jnp.broadcast_to(l1[:, None], m.shape).reshape(-1), _BIG)
+        l2 = l1.at[sf].min(push)
+        # shortcut: jump to the label's label
+        l3 = l2[l2]
+        return l3, jnp.any(l3 != l), it + 1
+
+    labels, _, iters = jax.lax.while_loop(
+        cond, body, (jnp.arange(n, dtype=jnp.int32), jnp.bool_(True), jnp.int32(0))
+    )
+    return labels, iters
+
+
+def path_components(
+    succ: jnp.ndarray, pred: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Component labels (minimum vertex id) of a disjoint union of simple
+    paths given successor/predecessor pointers (−1 = none).
+
+    Pointer doubling with running minima in both directions: after round k,
+    ``mf[u]``/``mb[u]`` hold the minimum over the 2^k vertices down-/upstream
+    of u, so ⌈log₂ n⌉+1 rounds cover any chain — unlike generic min-label
+    propagation this is O(log n) regardless of how vertex ids are permuted
+    along the path (a mid-chain minimum needs Θ(n) hook rounds to reach the
+    ends).  Also correct on residual cycles: the accumulated window then
+    wraps, yielding the cycle minimum.  Returns ``(labels, n_iterations)``.
+    """
+    n = succ.shape[0]
+    max_iters = _log2_ceil(n) + 1
+    ids = jnp.arange(n, dtype=jnp.int32)
+
+    def jump(t, m):
+        safe = jnp.where(t >= 0, t, 0)
+        m2 = jnp.where(t >= 0, jnp.minimum(m, m[safe]), m)
+        t2 = jnp.where(t >= 0, t[safe], -1)
+        return t2, m2
+
+    def cond(carry):
+        tf, tb, _, _, it = carry
+        return (jnp.any(tf >= 0) | jnp.any(tb >= 0)) & (it < max_iters)
+
+    def body(carry):
+        tf, tb, mf, mb, it = carry
+        tf, mf = jump(tf, mf)
+        tb, mb = jump(tb, mb)
+        return tf, tb, mf, mb, it + 1
+
+    _, _, mf, mb, iters = jax.lax.while_loop(
+        cond, body, (succ, pred, ids, ids, jnp.int32(0))
+    )
+    return jnp.minimum(mf, mb), iters
+
+
+def break_cycles(
+    succ: jnp.ndarray, pred: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Cut every cycle of a functional graph at its minimum-id vertex.
+
+    ``succ``/``pred`` are (n,) int32 inverse partial functions (−1 = none), so
+    components are disjoint simple paths and cycles.  Pointer doubling with a
+    running path-minimum classifies each vertex: after ⌈log₂ n⌉+1 doublings a
+    vertex whose 2^k-step pointer never fell off the end lies on a cycle, and
+    its accumulated minimum is the cycle minimum.  The kept edge *entering*
+    each cycle minimum is deleted, turning every cycle into a path whose head
+    is the minimum — the same canonical head the host walk picks.
+
+    Returns ``(succ', pred', n_cut)``.
+    """
+    n = succ.shape[0]
+    rounds = _log2_ceil(n) + 1
+    ids = jnp.arange(n, dtype=jnp.int32)
+
+    def step(_, carry):
+        t, m = carry
+        safe = jnp.where(t >= 0, t, 0)
+        m2 = jnp.where(t >= 0, jnp.minimum(m, m[safe]), m)
+        t2 = jnp.where(t >= 0, t[safe], -1)
+        return t2, m2
+
+    t, m = jax.lax.fori_loop(0, rounds, step, (succ, ids))
+    on_cycle = t >= 0
+    # the cycle vertex pointing at the cycle minimum loses its out-edge
+    cut = on_cycle & (succ == m)
+    n_cut = jnp.sum(cut).astype(jnp.int32)
+    succ2 = jnp.where(cut, -1, succ)
+    pred2 = jnp.where(on_cycle & (ids == m), -1, pred)
+    return succ2, pred2, n_cut
+
+
+def chain_rank(pred: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Head and rank of every vertex of a disjoint union of simple paths,
+    given predecessor pointers (−1 = chain head).
+
+    Classic pointer doubling: ``par ← par[par]`` while accumulating jumped
+    distance; converges in ⌈log₂ L⌉ rounds for the longest chain L (checked
+    with a ``while_loop`` so the returned iteration count reflects the actual
+    chain structure).  Returns ``(head, rank, n_iterations)``.
+    """
+    n = pred.shape[0]
+    max_iters = _log2_ceil(n) + 1
+    par0 = jnp.where(pred >= 0, pred, jnp.arange(n, dtype=jnp.int32))
+    d0 = (pred >= 0).astype(jnp.int32)
+
+    def cond(carry):
+        par, _, it = carry
+        return jnp.any(par[par] != par) & (it < max_iters)
+
+    def body(carry):
+        par, d, it = carry
+        return par[par], d + d[par], it + 1
+
+    par, rank, iters = jax.lax.while_loop(cond, body, (par0, d0, jnp.int32(0)))
+    return par, rank, iters

@@ -30,6 +30,13 @@ from .semiring import Semiring, tree_where
 NO_COL = jnp.int32(-1)
 
 
+def next_pow2(x: int) -> int:
+    """Smallest power of two ≥ max(x, 1) — the shared bucket-padding policy
+    (compacted alignment driver, contig-stage staging): pow-2 padding keeps
+    the number of distinct compiled shapes logarithmic in the live count."""
+    return 1 << max(0, int(x) - 1).bit_length()
+
+
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=["cols", "vals"],

@@ -1,0 +1,133 @@
+"""Unit tests for core/components.py: state-graph expansion, pointer-doubling
+connected components, cycle breaking, and chain ranking."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.assembly.contig_gen import string_matrix_from_edges
+from repro.core.components import (
+    break_cycles,
+    chain_rank,
+    connected_components,
+    degrees,
+    expand_states,
+    path_components,
+)
+from repro.core.spmat import EllMatrix
+
+
+def _adj(n, pairs, capacity=4):
+    """Directed ELL adjacency from (u, v) pairs."""
+    cols = np.full((n, capacity), -1, np.int32)
+    fill = np.zeros(n, int)
+    for u, v in sorted(pairs):
+        cols[u, fill[u]] = v
+        fill[u] += 1
+    return EllMatrix(
+        cols=jnp.asarray(cols),
+        vals=jnp.zeros((n, capacity), jnp.float32),
+        n_cols=n,
+    )
+
+
+def test_expand_states_maps_combos_to_state_edges():
+    # edge 0→1 at strands (0,1) suffix 30 → state edge 0 → 3
+    # edge 1→2 at strands (1,0) suffix 20 → state edge 3 → 4
+    s = string_matrix_from_edges(3, [(0, 1, 0, 1, 30), (1, 2, 1, 0, 20)])
+    g = expand_states(s)
+    assert g.n_cols == 6 and g.n_rows == 6
+    cols = np.asarray(g.cols)
+    vals = np.asarray(g.vals)
+    edges = {
+        (u, int(cols[u, q])): float(vals[u, q])
+        for u in range(6)
+        for q in range(cols.shape[1])
+        if cols[u, q] >= 0
+    }
+    assert edges == {(0, 3): 30.0, (3, 4): 20.0}
+    out_deg, in_deg = degrees(g)
+    assert out_deg.tolist() == [1, 0, 0, 1, 0, 0]
+    assert in_deg.tolist() == [0, 0, 0, 1, 1, 0]
+
+
+def test_expand_states_rows_sorted():
+    s = string_matrix_from_edges(
+        4, [(2, 3, 1, 1, 5), (2, 0, 1, 0, 9), (2, 1, 1, 1, 7)]
+    )
+    g = expand_states(s)
+    row = np.asarray(g.cols[5])  # state (2, strand 1)
+    live = row[row >= 0]
+    assert list(live) == sorted(live)
+    assert set(live) == {0, 3, 7}
+
+
+def test_connected_components_labels_and_isolated():
+    # components {0,1,2}, {3,4} (edge given one direction only), {5} isolated
+    adj = _adj(6, [(0, 1), (1, 2), (4, 3)])
+    labels, iters = connected_components(adj)
+    assert labels.tolist() == [0, 0, 0, 3, 3, 5]
+    assert int(iters) >= 1
+
+
+def test_connected_components_long_path_converges_logarithmically():
+    n = 256
+    adj = _adj(n, [(i, i + 1) for i in range(n - 1)], capacity=1)
+    labels, iters = connected_components(adj)
+    assert labels.tolist() == [0] * n
+    assert int(iters) <= 2 * int(np.ceil(np.log2(n))) + 4
+
+
+def test_path_components_permuted_path_is_logarithmic():
+    """A single chain whose vertex ids are randomly permuted along it: the
+    doubling labeler must find the mid-chain minimum in O(log n) rounds
+    (min-label propagation needs Θ(n) hook rounds here)."""
+    n = 257
+    rng = np.random.default_rng(2)
+    perm = rng.permutation(n)
+    succ = np.full(n, -1, np.int32)
+    pred = np.full(n, -1, np.int32)
+    for i in range(n - 1):
+        succ[perm[i]] = perm[i + 1]
+        pred[perm[i + 1]] = perm[i]
+    labels, iters = path_components(jnp.asarray(succ), jnp.asarray(pred))
+    assert labels.tolist() == [0] * n
+    assert int(iters) <= int(np.ceil(np.log2(n))) + 1
+
+
+def test_path_components_multiple_chains_and_isolated():
+    # chains 4→2→0 and 1→3; 5 isolated
+    succ = jnp.asarray([-1, 3, 0, -1, 2, -1], jnp.int32)
+    pred = jnp.asarray([2, -1, 4, 1, -1, -1], jnp.int32)
+    labels, _ = path_components(succ, pred)
+    assert labels.tolist() == [0, 1, 0, 1, 0, 5]
+
+
+def test_chain_rank_on_paths():
+    #  0→1→2→3  and 4→5; pred pointers, -1 at heads
+    pred = jnp.asarray([-1, 0, 1, 2, -1, 4], jnp.int32)
+    head, rank, iters = chain_rank(pred)
+    assert head.tolist() == [0, 0, 0, 0, 4, 4]
+    assert rank.tolist() == [0, 1, 2, 3, 0, 1]
+    assert int(iters) <= int(np.ceil(np.log2(6))) + 1
+
+
+def test_break_cycles_cuts_at_minimum():
+    # cycle 1→4→2→1 plus path 0→3
+    succ = jnp.asarray([3, 4, 1, -1, 2, -1], jnp.int32)
+    pred = jnp.asarray([-1, 2, 4, 0, 1, -1], jnp.int32)
+    s2, p2, n_cut = break_cycles(succ, pred)
+    assert int(n_cut) == 1
+    assert s2.tolist() == [3, 4, -1, -1, 2, -1]  # edge 2→1 cut (1 = cycle min)
+    assert p2.tolist() == [-1, -1, 4, 0, 1, -1]
+    # the cut graph is pure paths: chain_rank converges with head=1 for cycle
+    head, rank, _ = chain_rank(p2)
+    assert head.tolist() == [0, 1, 1, 0, 1, 5]
+    assert rank.tolist() == [0, 0, 2, 1, 1, 0]
+
+
+def test_break_cycles_self_loop():
+    succ = jnp.asarray([0, -1], jnp.int32)
+    pred = jnp.asarray([0, -1], jnp.int32)
+    s2, p2, n_cut = break_cycles(succ, pred)
+    assert int(n_cut) == 1
+    assert s2.tolist() == [-1, -1] and p2.tolist() == [-1, -1]

@@ -1,0 +1,268 @@
+"""Golden parity suite for the Contigs stage (DESIGN.md §2.7): the host-walk
+``reference`` backend and the device ``pallas`` backend must produce
+*identical* contigs — same (read, strand) chains, same lengths, same base
+sequences, same stats — on every string-graph shape: linear chains, branches,
+cycles, contained reads, isolated singletons, strand flips, and full
+simulated-genome pipelines (linear and circular)."""
+
+import numpy as np
+import pytest
+
+from repro.assembly.contig_gen import (
+    ContigSet,
+    generate_contigs,
+    string_matrix_from_edges,
+)
+from repro.assembly.contigs import Contig, ContigStats, contig_stats
+from repro.assembly.pipeline import PipelineConfig, assemble
+from repro.assembly.simulate import simulate_genome, simulate_reads
+
+
+def _sym(edges):
+    """Add the structural complement (j→i at flipped strands) per edge, the
+    way build_overlap_graph does for proper dovetails."""
+    out = list(edges)
+    for (i, j, a, b, suf) in edges:
+        out.append((j, i, 1 - b, 1 - a, suf + 7))
+    return out
+
+
+def _reads(n, seed=1, lmax=150):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 4, (n, lmax)).astype(np.uint8)
+    lengths = rng.integers(80, lmax - 10, n).astype(np.int32)
+    return codes, lengths
+
+
+def _assert_parity(s_mat, codes, lengths, contained=None):
+    ref = generate_contigs(s_mat, codes, lengths, contained,
+                           backend="reference")
+    dev = generate_contigs(s_mat, codes, lengths, contained, backend="pallas")
+    rc, dc = ref.to_contigs(), dev.to_contigs()
+    assert ref.n_contigs == dev.n_contigs
+    for a, b in zip(rc, dc):
+        assert a.reads == b.reads
+        assert a.length == b.length
+        assert np.array_equal(a.codes, b.codes)
+    assert contig_stats(rc) == contig_stats(dc)
+    assert ref.stats["n_branch_cut"] == dev.stats["n_branch_cut"]
+    return rc, dev
+
+
+SCENARIOS = {
+    "linear": (5, _sym([(i, i + 1, 0, 0, 30) for i in range(4)])),
+    "branch": (4, _sym([(0, 1, 0, 0, 30), (0, 2, 0, 0, 25),
+                        (2, 3, 0, 0, 20)])),
+    "in_branch": (4, _sym([(1, 0, 0, 0, 30), (2, 0, 1, 0, 25),
+                           (3, 1, 0, 0, 10)])),
+    "cycle": (3, _sym([(0, 1, 0, 0, 30), (1, 2, 0, 0, 30),
+                       (2, 0, 0, 0, 30)])),
+    "strand_mix": (4, _sym([(0, 1, 0, 1, 30), (1, 2, 1, 1, 25),
+                            (2, 3, 1, 0, 20)])),
+    "asymmetric": (4, [(0, 1, 0, 0, 30), (1, 2, 0, 0, 25),
+                       (2, 3, 0, 0, 20)]),
+    "zero_suffix": (3, _sym([(0, 1, 0, 0, 0), (1, 2, 0, 0, 15)])),
+    "empty": (3, []),
+}
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_parity_handcrafted(name):
+    n, edges = SCENARIOS[name]
+    codes, lengths = _reads(n)
+    _assert_parity(string_matrix_from_edges(n, edges), codes, lengths)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_parity_random_graphs(seed):
+    rng = np.random.default_rng(seed)
+    n, e = 16, 40
+    edges = [
+        (int(i), int(j), int(a), int(b), int(s))
+        for i, j, a, b, s in zip(
+            rng.integers(0, n, e), rng.integers(0, n, e),
+            rng.integers(0, 2, e), rng.integers(0, 2, e),
+            rng.integers(1, 60, e),
+        )
+        if i != j
+    ]
+    codes, lengths = _reads(n, seed=seed)
+    _assert_parity(string_matrix_from_edges(n, edges), codes, lengths)
+
+
+def test_parity_contained_and_isolated():
+    n = 5
+    s = string_matrix_from_edges(n, _sym([(0, 1, 0, 0, 30)]))
+    codes, lengths = _reads(n)
+    contained = np.zeros(n, bool)
+    contained[4] = True
+    rc, _ = _assert_parity(s, codes, lengths, contained)
+    # reads 2, 3 isolated singletons; read 4 contained → suppressed
+    singleton_reads = {c.reads[0][0] for c in rc if len(c.reads) == 1}
+    assert {2, 3} <= singleton_reads
+    assert 4 not in {r for c in rc for r, _ in c.reads}
+
+
+def test_parity_simulated_linear_genome():
+    rng = np.random.default_rng(3)
+    g = simulate_genome(rng, 3000)
+    rs = simulate_reads(g, depth=8, mean_len=400, std_len=60,
+                        error_rate=0.02, seed=4)
+    cfg = PipelineConfig(
+        m_capacity=1 << 15, upper=48, read_capacity=64, overlap_capacity=32,
+        r_capacity=24, band=17, max_steps=512, align_chunk=1024, xdrop=25,
+        backend="reference",
+    )
+    res = assemble(rs.codes, rs.lengths, cfg)
+    _assert_parity(res.s_graph, rs.codes, rs.lengths, res.contained)
+
+
+def test_parity_simulated_circular_genome():
+    """Circular genome → the string graph closes into a cycle; the canonical
+    cut at the minimum state must agree between backends."""
+    rng = np.random.default_rng(5)
+    g = simulate_genome(rng, 2500)
+    rs = simulate_reads(g, depth=9, mean_len=400, std_len=50,
+                        error_rate=0.0, seed=6, circular=True)
+    cfg = PipelineConfig(
+        m_capacity=1 << 15, upper=48, read_capacity=64, overlap_capacity=32,
+        r_capacity=24, band=17, max_steps=512, align_chunk=1024, xdrop=25,
+        backend="reference",
+    )
+    res = assemble(rs.codes, rs.lengths, cfg)
+    rc, _ = _assert_parity(res.s_graph, rs.codes, rs.lengths, res.contained)
+    assert len(rc) >= 1
+
+
+def test_parity_long_permuted_unitig():
+    """One 128-read unitig whose read ids are shuffled along the chain —
+    regression for the label-propagation iteration cap that used to split
+    long permuted chains on the device path."""
+    n = 128
+    rng = np.random.default_rng(9)
+    perm = rng.permutation(n)
+    edges = []
+    for i in range(n - 1):
+        a, b = int(perm[i]), int(perm[i + 1])
+        edges.append((a, b, 0, 0, 30))
+        edges.append((b, a, 1, 1, 33))
+    codes, lengths = _reads(n)
+    rc, _ = _assert_parity(
+        string_matrix_from_edges(n, edges, capacity=4), codes, lengths
+    )
+    assert max(len(c.reads) for c in rc) == n
+
+
+def test_rc_twins_emitted_once():
+    n = 3
+    s = string_matrix_from_edges(n, _sym([(0, 1, 0, 0, 30), (1, 2, 0, 0, 25)]))
+    codes, lengths = _reads(n)
+    rc, _ = _assert_parity(s, codes, lengths)
+    # one chain covering all three reads, emitted once (not once per strand)
+    chains = [c for c in rc if len(c.reads) == 3]
+    assert len(chains) == 1
+    # the kept representative is the lexicographically smaller orientation
+    states = [2 * r + st for r, st in chains[0].reads]
+    twin = [s ^ 1 for s in reversed(states)]
+    assert states < twin
+
+
+def test_dedup_keys_on_chain_not_read_set():
+    """Two distinct chains visiting the same read set in different orders are
+    both contigs; the old ``frozenset(read ids)`` key collapsed them."""
+    # chain A: (0,0)→(1,0)→(2,0);  chain B: (2,1)→(0,1)→(1,1).
+    # Both visit reads {0,1,2}; B is NOT the reverse-complement of A
+    # (twin(A) = (2,1)→(1,1)→(0,1)).
+    edges = [
+        (0, 1, 0, 0, 30), (1, 2, 0, 0, 25),
+        (2, 0, 1, 1, 20), (0, 1, 1, 1, 15),
+    ]
+    n = 3
+    s = string_matrix_from_edges(n, edges)
+    codes, lengths = _reads(n)
+    rc, _ = _assert_parity(s, codes, lengths)
+    chains = sorted(c.reads for c in rc if len(c.reads) == 3)
+    assert chains == [
+        [(0, 0), (1, 0), (2, 0)],
+        [(2, 1), (0, 1), (1, 1)],
+    ]
+
+
+def test_parity_suffix_exceeding_read_length():
+    """Degenerate suffix > read length: both backends clamp to appending at
+    most the whole read (no negative host slices, no device index clipping
+    artifacts)."""
+    n = 2
+    s = string_matrix_from_edges(n, [(0, 1, 0, 0, 90)])
+    codes, lengths = _reads(n)
+    lengths[:] = 50
+    rc, _ = _assert_parity(s, codes, lengths)
+    chain = next(c for c in rc if len(c.reads) == 2)
+    assert chain.length == 100  # 50 (head) + min(90, 50)
+
+
+def test_contig_set_materialization_roundtrip():
+    n = 4
+    s = string_matrix_from_edges(n, _sym([(i, i + 1, 0, 0, 20)
+                                          for i in range(3)]))
+    codes, lengths = _reads(n)
+    dev = generate_contigs(s, codes, lengths, backend="pallas")
+    assert isinstance(dev, ContigSet)
+    contigs = dev.to_contigs()
+    assert len(contigs) == dev.n_contigs
+    lens = np.asarray(dev.lengths)
+    for i, c in enumerate(contigs):
+        assert c.length == len(c.codes)
+        assert int(lens[i]) == c.length
+
+
+# ---------------------------------------------------------------------------
+# ContigStats extensions (l50, mean_length, degenerate guards).
+# ---------------------------------------------------------------------------
+
+
+def _fake(lengths):
+    return [Contig(reads=[(0, 0)], length=l, codes=np.zeros(l, np.uint8))
+            for l in lengths]
+
+
+def test_contig_stats_n50_l50_mean():
+    cs = contig_stats(_fake([100, 80, 40, 20]))
+    assert cs == ContigStats(
+        n_contigs=4, total_length=240, n50=80, longest=100, l50=2,
+        mean_length=60.0,
+    )
+
+
+def test_contig_stats_single():
+    cs = contig_stats(_fake([50]))
+    assert (cs.n50, cs.l50, cs.longest, cs.mean_length) == (50, 1, 50, 50.0)
+
+
+def test_contig_stats_empty_list():
+    assert contig_stats([]) == ContigStats(0, 0, 0, 0, 0, 0.0)
+
+
+def test_contig_stats_all_zero_lengths():
+    cs = contig_stats(_fake([0, 0, 0]))
+    assert cs == ContigStats(
+        n_contigs=3, total_length=0, n50=0, longest=0, l50=0, mean_length=0.0,
+    )
+
+
+def test_pipeline_stats_carry_contig_gen_counters():
+    rng = np.random.default_rng(7)
+    g = simulate_genome(rng, 2000)
+    rs = simulate_reads(g, depth=7, mean_len=350, std_len=40,
+                        error_rate=0.0, seed=8)
+    cfg = PipelineConfig(
+        m_capacity=1 << 15, upper=48, read_capacity=64, overlap_capacity=32,
+        r_capacity=24, band=17, max_steps=512, align_chunk=1024, xdrop=25,
+        backend="pallas",
+    )
+    res = assemble(rs.codes, rs.lengths, cfg)
+    assert "n_branch_cut" in res.stats and res.stats["n_branch_cut"] >= 0
+    assert res.stats["cc_iterations"] >= 1
+    cs = res.stats["contigs"]
+    assert set(cs) == {"n_contigs", "total_length", "n50", "longest", "l50",
+                       "mean_length"}
