@@ -1,6 +1,6 @@
 """Fig. 5-8 analogue: per-stage runtime breakdown of the pipeline
 (CountKmer / CreateSpMat / SpGEMM / Alignment / BuildR / TrReduction /
-Contigs), with a backend axis: the reference row set uses the jnp oracles
+Contigs / Consensus), with a backend axis: the reference row set uses the jnp oracles
 and the host contig walk, the pallas row set routes the hot ops (x-drop
 extension, min-plus squares) through the Pallas kernels via the dispatch
 layer (compiled on TPU, interpret elsewhere) and runs the device contig
@@ -44,6 +44,15 @@ def run(backends=("reference", "pallas")):
              f"mean={cs['mean_length']:.0f};"
              f"branch_cut={res.stats['n_branch_cut']};"
              f"cc_iters={res.stats['cc_iterations']}")
+        )
+        rows.append(
+            (f"breakdown[{backend}]/consensus_stats",
+             res.timings["Consensus"] * 1e6,
+             f"depth_mean={res.stats['consensus_depth_mean']:.2f};"
+             f"identity_est={res.stats['identity_estimate']:.4f};"
+             f"qv_est={res.stats['qv_estimate']:.1f};"
+             f"changed={res.stats['consensus_changed']};"
+             f"junction_shifts={res.stats['n_junction_shifted']}")
         )
     return rows
 

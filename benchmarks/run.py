@@ -1,16 +1,41 @@
 """Benchmark driver: one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV (per the harness contract)."""
 
+Prints ``name,us_per_call,derived`` CSV (per the harness contract) and, with
+``--json PATH``, also emits machine-readable per-benchmark records
+``{name, op, backend, shape, ms, derived}`` so the perf trajectory can be
+tracked across commits (CI uploads a smoke-size artifact per run).
+
+    python -m benchmarks.run [--only contigs,consensus] [--smoke]
+                             [--json BENCH.json]
+"""
+
+import argparse
+import inspect
+import json
+import re
 import sys
 
+# row names look like "op[backend]/shape"; backend and shape are optional
+_NAME_RE = re.compile(r"^(?P<op>[^\[/]+)(?:\[(?P<backend>[^\]]+)\])?"
+                      r"(?:/(?P<shape>.*))?$")
 
-def main() -> None:
+# reduced-size kwargs per module for the CI smoke run (only passed when the
+# module's run() accepts them)
+_SMOKE = {
+    "contigs": {"sweep": (256,)},
+    "consensus": {"sweep": (256,)},
+    "scaling": {"sweep": (256,)},
+}
+
+
+def _modules():
     from . import (
-        bench_breakdown, bench_comm_model, bench_contigs, bench_kernels,
-        bench_overlap, bench_scaling, bench_sparsity, bench_tr,
+        bench_breakdown, bench_comm_model, bench_consensus, bench_contigs,
+        bench_kernels, bench_overlap, bench_scaling, bench_sparsity,
+        bench_tr,
     )
 
-    mods = [
+    return [
         ("comm_model[TableI]", bench_comm_model),
         ("sparsity[TableIII]", bench_sparsity),
         ("tr[TableVI]", bench_tr),
@@ -19,15 +44,67 @@ def main() -> None:
         ("overlap[Fig9]", bench_overlap),
         ("kernels", bench_kernels),
         ("contigs", bench_contigs),
+        ("consensus", bench_consensus),
     ]
+
+
+def _record(name, us, derived):
+    m = _NAME_RE.match(name)
+    return {
+        "name": name,
+        "op": m.group("op") if m else name,
+        "backend": m.group("backend") if m else None,
+        "shape": m.group("shape") if m else None,
+        "ms": us / 1e3,
+        "derived": str(derived),
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write per-benchmark JSON records to PATH")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module keys (e.g. contigs,consensus)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for CI (see _SMOKE)")
+    ns = ap.parse_args(argv)
+    mods = _modules()
+    only = set(ns.only.split(",")) if ns.only else None
+    if only is not None:
+        known = {label.split("[")[0] for label, _ in mods}
+        unknown = only - known
+        if unknown:
+            ap.error(f"unknown --only keys {sorted(unknown)}; "
+                     f"known: {sorted(known)}")
+
+    records = []
     print("name,us_per_call,derived")
-    for label, mod in mods:
-        try:
-            for name, us, derived in mod.run():
-                print(f"{name},{us:.1f},{derived}", flush=True)
-        except Exception as exc:  # pragma: no cover
-            print(f"{label}/ERROR,nan,{type(exc).__name__}:{exc}", flush=True)
-            raise
+    try:
+        for label, mod in mods:
+            key = label.split("[")[0]
+            if only is not None and key not in only:
+                continue
+            kwargs = {}
+            if ns.smoke:
+                accepted = inspect.signature(mod.run).parameters
+                kwargs = {k: v for k, v in _SMOKE.get(key, {}).items()
+                          if k in accepted}
+            try:
+                for name, us, derived in mod.run(**kwargs):
+                    print(f"{name},{us:.1f},{derived}", flush=True)
+                    records.append(_record(name, us, derived))
+            except Exception as exc:  # pragma: no cover
+                print(f"{label}/ERROR,nan,{type(exc).__name__}:{exc}",
+                      flush=True)
+                raise
+    finally:
+        # keep the partial trajectory even when a late module dies
+        if ns.json:
+            with open(ns.json, "w") as f:
+                json.dump(records, f, indent=1)
+            print(f"# wrote {len(records)} records to {ns.json}",
+                  file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,304 @@
+"""Consensus stage: device-side pileup polishing of the contig tensor
+(DESIGN.md §2.8).
+
+The OLC paradigm's third act.  After contig generation the contig tensor is a
+raw concatenation of error-bearing read suffixes, which bounds per-base
+identity at ~(1−e) and k-mer recall at ~(1−e)^k.  This stage maps every
+chain read back onto its contig using the layout the Contigs stage already
+computed (``ContigSet.offsets/widths``: piece t's *last* ``width`` oriented
+bases sit at columns ``[offset, offset + width)``, so the full oriented read
+starts at ``offset + width − read_length``), then polishes in three array
+steps, none of which loops over reads in Python:
+
+1. **junction refinement** — the chain offsets inherit the x-drop endpoint
+   fuzz of the alignment stage (a suffix wrong by ±δ shifts every later read
+   and bakes δ inserted/deleted bases into the draft at the junction), so
+   each piece's placement against its predecessor is re-estimated by banded
+   cross-correlation (shift search in ``[−junction_radius, junction_radius]``
+   over the overlap region — all chain pairs scored at once) and the layout
+   is rebuilt by cumulative sum of the corrected relative offsets;
+2. **draft re-scatter** — the corrected layout re-materializes the draft
+   tensor (same last-``width``-bases scatter as the Contigs stage), undoing
+   the junction indels;
+3. **pileup vote** — the op ``consensus`` (DESIGN.md §2.5) accumulates the
+   per-column base-count pileup of every read at its corrected placement and
+   re-calls each column by majority vote (strict majority + ``min_depth``
+   gating; draft base retained otherwise).  ``"reference"`` is the jnp
+   scatter-add oracle, ``"pallas"`` the column-banded Pallas kernel
+   (``kernels/pileup``); integer vote counts make the two bit-for-bit
+   identical (``tests/test_consensus.py``).  Steps 1–2 are shared jnp code,
+   so whole-stage backend parity follows from op parity.
+
+Per-column depth and the vote-agreement fraction give a contig-level
+identity/QV estimate for free.
+
+Scope note: refinement is per-junction (one shift per consecutive read
+pair), which cancels the dominant, accumulating placement error.  Indel
+errors *inside* a read still decay vote coherence away from the read's
+anchor (the strict-majority gate keeps those columns on the draft rather
+than flipping them on noise); banded per-read realignment against the draft
+is the follow-up (ROADMAP).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.backend import dispatch
+from .contigs import Contig, materialize_rows
+
+# junction refinement scores the last JUNCTION_WIN bases of each overlap —
+# drift there is what anchors the piece boundary (see _refine_layout)
+JUNCTION_WIN = 64
+
+
+@dataclasses.dataclass
+class ConsensusResult:
+    """Polished contig tensors + per-column/per-contig quality evidence.
+
+    Rows beyond ``n_contigs`` are padding, aligned with the ``ContigSet``
+    the result was polished from.  ``lengths`` is the *refined* layout's
+    length per contig (junction refinement can shrink or grow a contig by a
+    few bases per junction).  ``identity``/``qv`` are *estimates* from vote
+    agreement (fraction of pileup votes agreeing with the emitted base), not
+    truth-based measurements — ``assembly/metrics.py`` has the measured
+    counterpart."""
+
+    codes: Any  # (C, L) uint8, polished bases
+    lengths: Any  # (C,) int32, refined contig lengths
+    states: Any  # (C, M) int32, -1 padded (carried from the ContigSet)
+    depth: Any  # (C, L) int32, pileup depth per column
+    agree: Any  # (C, L) int32, votes agreeing with the emitted base
+    depth_mean: Any  # (C,) f32, mean pileup depth per contig
+    identity: Any  # (C,) f32, per-contig identity estimate
+    qv: Any  # (C,) f32, −10·log10(1 − identity), capped
+    n_contigs: int
+    stats: Dict[str, float]
+
+    def to_contigs(self) -> List[Contig]:
+        return materialize_rows(
+            self.codes, self.lengths, self.states, self.n_contigs
+        )
+
+
+@jax.jit
+def _gather_pieces(states, offsets, widths, codes, lengths):
+    """Orient every chain read and compute its nominal contig placement.
+
+    Returns ``(pieces (C, M, LR) uint8, start (C, M) i32, plen (C, M) i32)``
+    where ``pieces[c, t]`` is read t of contig c in contig orientation
+    (zero-padded past its length) and ``start`` is the contig column of its
+    base 0 under the Contigs-stage layout."""
+    lr = codes.shape[1]
+    valid = states >= 0
+    r = jnp.where(valid, states >> 1, 0)
+    rc = (jnp.where(valid, states & 1, 0) == 1)[:, :, None]
+    ln = jnp.where(valid, lengths[r], 0)
+    start = jnp.where(valid, offsets + widths - ln, 0)
+    b = jnp.arange(lr, dtype=jnp.int32)[None, None, :]
+    idx = jnp.where(rc, ln[:, :, None] - 1 - b, b)
+    base = jnp.take_along_axis(codes[r], jnp.clip(idx, 0, lr - 1), axis=2)
+    base = jnp.where(rc, 3 - base, base)
+    pieces = jnp.where(b < ln[:, :, None], base, 0).astype(jnp.uint8)
+    return pieces, start.astype(jnp.int32), ln.astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("radius",))
+def _refine_layout(pieces, start, plen, *, radius: int):
+    """Re-estimate each junction's relative offset by banded correlation.
+
+    For every chain pair (t−1, t) the nominal relative offset
+    ``Δ = start_t − start_{t−1}`` is searched over ``Δ + δ, |δ| ≤ radius``
+    for the shift maximizing base agreement on the *junction end* of the
+    overlap region (its last ``JUNCTION_WIN`` bases).  The junction-local
+    window matters on indel-bearing reads: drift varies across the overlap,
+    and the piece boundary must be anchored by the drift where the piece
+    starts appending, not by the overlap-wide average.  A shift
+    is only applied when it beats the nominal placement *decisively*
+    (by > max(8, nominal/2) matching bases — i.e. the nominal window looks
+    like noise while the shifted one looks like a real overlap): the nominal
+    offset came from a real x-drop alignment, so on indel-bearing overlaps —
+    where the correlation profile is smeared and a one-shift correction
+    cannot model the within-read drift anyway — the layout is left alone,
+    and error-free layouts are returned unchanged exactly.  Corrected
+    placements are the
+    cumulative sum of corrected offsets; the piece layout (offset = previous
+    running end, width = newly appended bases) is rebuilt from them.
+    Returns ``(start', offset', width', lengths', n_shifted)``."""
+    c, m, lr = pieces.shape
+    valid = plen > 0
+    prev = jnp.roll(pieces, 1, axis=1).astype(jnp.int32)
+    prev_len = jnp.roll(plen, 1, axis=1)
+    prev_start = jnp.roll(start, 1, axis=1)
+    t_pos = jnp.arange(m, dtype=jnp.int32)[None, :]
+    pair = valid & (t_pos >= 1) & (prev_len > 0)
+    delta0 = jnp.where(pair, start - prev_start, 0)
+
+    b = jnp.arange(lr, dtype=jnp.int32)[None, None, :]
+    cur = pieces.astype(jnp.int32)
+    # nominal overlap length of each pair; only its junction-side tail is
+    # scored (b ∈ [ov − JUNCTION_WIN, ov))
+    ov = jnp.where(pair, prev_start + prev_len - start, 0)
+
+    def score_at(d):
+        idx = b + delta0[:, :, None] + d
+        ok = (
+            pair[:, :, None]
+            & (b < plen[:, :, None])
+            & (b >= (ov - JUNCTION_WIN)[:, :, None])
+            & (idx >= 0)
+            & (idx < prev_len[:, :, None])
+        )
+        pv = jnp.take_along_axis(prev, jnp.clip(idx, 0, lr - 1), axis=2)
+        return jnp.sum(ok & (pv == cur), axis=2).astype(jnp.int32)
+
+    # δ = 0 first so ties keep the nominal layout; then outward by |δ|
+    shifts = [0]
+    for d in range(1, radius + 1):
+        shifts.extend((-d, d))
+    sc = jnp.stack([score_at(d) for d in shifts], axis=-1)  # (C, M, S)
+    pick = jnp.argmax(sc, axis=-1)
+    dbest = jnp.asarray(shifts, jnp.int32)[pick]
+    best = jnp.max(sc, axis=-1)
+    sc0 = sc[..., 0]  # the nominal placement (δ = 0 is candidate 0)
+    decisive = best > sc0 + jnp.maximum(8, sc0 // 2)
+    # ...and the winning window must look like a genuinely coherent overlap
+    # (≥ 80% matches): on indel-bearing overlaps no single shift reaches
+    # that, so the alignment-derived nominal layout is kept
+    strong = 5 * best >= 4 * jnp.minimum(ov, JUNCTION_WIN)
+    dbest = jnp.where(pair & decisive & strong, dbest, 0)
+
+    # corrected placement: cumsum of per-junction offsets (head starts at 0)
+    step = jnp.where(pair, delta0 + dbest, 0)
+    new_start = jnp.cumsum(step, axis=1)
+    # piece layout: running-max ends make widths non-negative even if a
+    # refined read turns out contained in its predecessors
+    ends = jnp.where(valid, new_start + plen, 0)
+    run_end = jax.lax.cummax(ends, axis=1)
+    prev_end = jnp.concatenate(
+        [jnp.zeros((c, 1), run_end.dtype), run_end[:, :-1]], axis=1
+    )
+    new_width = jnp.where(valid, jnp.maximum(run_end - prev_end, 0), 0)
+    new_off = jnp.where(valid, prev_end, 0)
+    new_len = jnp.max(run_end, axis=1).astype(jnp.int32)
+    n_shifted = jnp.sum(dbest != 0)
+    return (
+        new_start.astype(jnp.int32),
+        new_off.astype(jnp.int32),
+        new_width.astype(jnp.int32),
+        new_len,
+        n_shifted,
+    )
+
+
+@partial(jax.jit, static_argnames=("l",))
+def _rescatter_draft(pieces, offs, widths, plen, *, l: int):
+    """Re-materialize the draft under a (refined) layout: piece t writes its
+    last ``width`` bases at columns ``[offset, offset + width)`` — the same
+    contract as the Contigs-stage gather (DESIGN.md §2.7)."""
+    c, m, lr = pieces.shape
+    b = jnp.arange(lr, dtype=jnp.int32)[None, None, :]
+    cols = offs[:, :, None] + b - (plen - widths)[:, :, None]
+    on = (b >= (plen - widths)[:, :, None]) & (b < plen[:, :, None])
+    on &= (cols >= 0) & (cols < l)
+    rows = jnp.arange(c, dtype=jnp.int32)[:, None, None]
+    out = jnp.zeros((c, l + 1), jnp.uint8)
+    out = out.at[rows, jnp.where(on, cols, l)].set(jnp.where(on, pieces, 0))
+    return out[:, :l]
+
+
+@jax.jit
+def _quality(draft, polished, depth, agree, lengths):
+    """Shared (backend-independent) reductions over the op outputs."""
+    l = draft.shape[1]
+    colmask = jnp.arange(l)[None, :] < lengths[:, None]
+    covered = colmask & (depth > 0)
+    num = jnp.sum(jnp.where(covered, agree, 0), axis=1)
+    den = jnp.sum(jnp.where(covered, depth, 0), axis=1)
+    ident = num.astype(jnp.float32) / jnp.maximum(den, 1)
+    ident = jnp.where(den > 0, ident, 1.0)
+    qv = -10.0 * jnp.log10(jnp.maximum(1.0 - ident, 1e-6))
+    dsum = jnp.sum(jnp.where(colmask, depth, 0), axis=1)
+    depth_c = dsum.astype(jnp.float32) / jnp.maximum(
+        jnp.sum(colmask, axis=1), 1
+    )
+    n_cols = jnp.maximum(jnp.sum(colmask), 1)
+    depth_mean = jnp.sum(dsum) / n_cols
+    overall = jnp.sum(num).astype(jnp.float32) / jnp.maximum(jnp.sum(den), 1)
+    n_changed = jnp.sum((polished != draft) & colmask)
+    return ident, qv, depth_c, depth_mean, overall, n_changed
+
+
+def polish_contig_set(
+    cset, codes, lengths, *, backend: str = "auto", min_depth: int = 2,
+    band: int = 512, junction_radius: int = 12,
+) -> ConsensusResult:
+    """Polish a ``ContigSet`` against its own reads via the ``consensus`` op.
+
+    ``codes``/``lengths`` are the read tensors the contigs were generated
+    from; ``min_depth``/``band``/``junction_radius`` are the
+    ``PipelineConfig`` knobs ``min_depth``/``pileup_band``/
+    ``junction_radius`` (``junction_radius=0`` skips refinement and votes on
+    the Contigs-stage layout as-is).
+
+    The result's column capacity is the maximum (refined) contig length —
+    a *data-dependent* width, deliberately not the input tensor's padded
+    width: refinement may grow a contig past the draft's capacity (nothing
+    may be truncated), and the two contig backends pad their ContigSets
+    differently (exact vs pow2), so any capacity-derived bound would leak
+    backend-dependent behavior into the bit-parity contract."""
+    states = jnp.asarray(cset.states, jnp.int32)
+    pieces, start, plen = _gather_pieces(
+        states,
+        jnp.asarray(cset.offsets, jnp.int32),
+        jnp.asarray(cset.widths, jnp.int32),
+        jnp.asarray(codes, jnp.uint8),
+        jnp.asarray(lengths, jnp.int32),
+    )
+    if junction_radius > 0:
+        start, offs, widths, lens, n_shifted = _refine_layout(
+            pieces, start, plen, radius=junction_radius
+        )
+        l_op = max(int(jnp.max(lens)), 1)
+        draft = _rescatter_draft(pieces, offs, widths, plen, l=l_op)
+    else:
+        lens = jnp.asarray(cset.lengths, jnp.int32)
+        n_shifted = jnp.int32(0)
+        l_op = max(int(jnp.max(lens)), 1)
+        d0 = jnp.asarray(cset.codes, jnp.uint8)
+        draft = (
+            d0[:, :l_op] if d0.shape[1] >= l_op
+            else jnp.pad(d0, ((0, 0), (0, l_op - d0.shape[1])))
+        )
+    polished, depth, agree = dispatch("consensus", backend)(
+        draft, pieces, start, plen, min_depth=min_depth, band=band
+    )
+    ident, qv, depth_c, depth_mean, overall, n_changed = _quality(
+        draft, polished, depth, agree, lens
+    )
+    return ConsensusResult(
+        codes=polished,
+        lengths=lens,
+        states=states,
+        depth=depth,
+        agree=agree,
+        depth_mean=depth_c,
+        identity=ident,
+        qv=qv,
+        n_contigs=cset.n_contigs,
+        stats={
+            "consensus_depth_mean": float(depth_mean),
+            "identity_estimate": float(overall),
+            "qv_estimate": float(
+                -10.0 * np.log10(max(1.0 - float(overall), 1e-6))
+            ),
+            "n_changed": int(n_changed),
+            "n_junction_shifted": int(n_shifted),
+        },
+    )

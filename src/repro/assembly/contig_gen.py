@@ -58,6 +58,7 @@ from .contigs import (
     Contig,
     extract_contig_chains,
     materialize_contigs,
+    materialize_rows,
     state_edges,
 )
 
@@ -70,29 +71,27 @@ class ContigSet:
 
     ``codes``/``lengths``/``states`` rows beyond ``n_contigs`` are padding.
     ``states`` holds the (read, strand) chain as state ids ``2·read+strand``
-    (−1 padded); singleton contigs have a single state ``2·read``."""
+    (−1 padded); singleton contigs have a single state ``2·read``.
+
+    ``offsets``/``widths`` are the per-piece read provenance consumed by the
+    consensus stage (DESIGN.md §2.8), aligned with ``states``: piece t of a
+    contig wrote its last ``widths[c, t]`` oriented bases at contig columns
+    ``[offsets[c, t], offsets[c, t] + widths[c, t])``, so the *full* oriented
+    read spans columns starting at ``offsets + widths − read_length``.
+    Entries where ``states < 0`` are zero padding."""
 
     codes: Any  # (C, L) uint8
     lengths: Any  # (C,) int32
     states: Any  # (C, M) int32, -1 padded
+    offsets: Any  # (C, M) int32, piece destination column
+    widths: Any  # (C, M) int32, bases the piece appended
     n_contigs: int
     stats: Dict[str, int]  # n_branch_cut, cc_iterations
 
     def to_contigs(self) -> List[Contig]:
-        codes = np.asarray(self.codes)
-        lens = np.asarray(self.lengths)
-        states = np.asarray(self.states)
-        out: List[Contig] = []
-        for i in range(self.n_contigs):
-            ss = states[i][states[i] >= 0]
-            out.append(
-                Contig(
-                    reads=[(int(s) >> 1, int(s) & 1) for s in ss],
-                    length=int(lens[i]),
-                    codes=codes[i, : lens[i]].copy(),
-                )
-            )
-        return out
+        return materialize_rows(
+            self.codes, self.lengths, self.states, self.n_contigs
+        )
 
 
 def string_matrix_from_edges(n_reads, edges, *, capacity=8) -> EllMatrix:
@@ -121,6 +120,37 @@ def string_matrix_from_edges(n_reads, edges, *, capacity=8) -> EllMatrix:
         semiring=minplus_orient_semiring,
     )
     return mat
+
+
+def consistent_chain_graph(n, seed, *, err=0.0, break_every=None):
+    """Dovetail-chain string matrix whose reads really are slices of one
+    synthetic genome (optionally ``err`` substitutions, optionally broken
+    into separate chains every ``break_every`` reads) — test and benchmark
+    scaffolding for the consensus stage, where overlap votes must be
+    genome-coherent to pass the coherence gate (DESIGN.md §2.8).  Returns
+    ``(s_mat, codes, lengths, genome)``."""
+    rng = np.random.default_rng(seed)
+    lengths = rng.integers(180, 250, n).astype(np.int32)
+    pos = np.zeros(n, np.int64)
+    edges = []
+    for i in range(n - 1):
+        ov = int(min(rng.integers(80, 140), lengths[i] - 1,
+                     lengths[i + 1] - 1))
+        pos[i + 1] = pos[i] + lengths[i] - ov
+        if break_every is None or i % break_every != break_every - 1:
+            edges.append((i, i + 1, 0, 0, int(lengths[i + 1]) - ov))
+            edges.append((i + 1, i, 1, 1, int(lengths[i]) - ov))
+    genome = rng.integers(0, 4, int(pos[-1] + lengths[-1]), dtype=np.uint8)
+    lmax = int(lengths.max())
+    codes = np.zeros((n, lmax), np.uint8)
+    for i in range(n):
+        codes[i, : lengths[i]] = genome[pos[i] : pos[i] + lengths[i]]
+    if err > 0:
+        flip = rng.random((n, lmax)) < err
+        codes = np.where(
+            flip, (codes + rng.integers(1, 4, (n, lmax))) % 4, codes
+        ).astype(np.uint8)
+    return string_matrix_from_edges(n, edges, capacity=8), codes, lengths, genome
 
 
 # ---------------------------------------------------------------------------
@@ -262,6 +292,19 @@ def _chain_layout(st, lengths, contained, *, ca, m):
     piece_row = jnp.where(piece_on, contig_row_of_chain[chain_clip], 0)
     end = seg_total  # contig length = total width of its chain
 
+    # per-piece provenance in chain-row layout (aligned with ``rows``): the
+    # consensus stage (DESIGN.md §2.8) maps every read back onto its contig
+    # through (offset, width)
+    prov_col = jnp.minimum(rank_s, m - 1)
+    dst_rows = (
+        jnp.zeros((ca + 1, m), jnp.int32).at[chain_safe, prov_col].set(dst)[:ca]
+    )
+    width_rows = (
+        jnp.zeros((ca + 1, m), jnp.int32)
+        .at[chain_safe, prov_col]
+        .set(width)[:ca]
+    )
+
     # isolated reads (no state-graph edges at all) → singleton contigs
     iso = ~st["has_edge"] & ~contained
     iso_row = n_chain_contigs + jnp.cumsum(iso.astype(jnp.int32)) - 1
@@ -271,6 +314,8 @@ def _chain_layout(st, lengths, contained, *, ca, m):
     )
     return {
         "rows": rows,
+        "dst_rows": dst_rows,
+        "width_rows": width_rows,
         "keep": keep,
         "contig_row_of_chain": contig_row_of_chain,
         "contig_len": end,
@@ -345,7 +390,19 @@ def _gather_codes(st, lay, codes, lengths, *, c, l):
         .at[irow, 0]
         .set(2 * jnp.arange(n))[:c]
     )
-    return out, out_len, out_states
+    # piece provenance (DESIGN.md §2.8): isolated singletons are one piece of
+    # the full read at offset 0
+    out_offs = (
+        jnp.zeros((c + 1, m), jnp.int32).at[crow, :].set(lay["dst_rows"])[:c]
+    )
+    out_widths = (
+        jnp.zeros((c + 1, m), jnp.int32)
+        .at[crow, :]
+        .set(lay["width_rows"])
+        .at[irow, 0]
+        .set(jnp.where(iso, lengths, 0))[:c]
+    )
+    return out, out_len, out_states, out_offs, out_widths
 
 
 # ---------------------------------------------------------------------------
@@ -366,13 +423,15 @@ def _device_contig_gen(s_mat, codes, lengths, contained=None) -> ContigSet:
     lay = _chain_layout(st, lengths, contained, ca=ca, m=m)
     c = next_pow2(int(lay["n_contigs"]))
     l = next_pow2(int(lay["max_len"]))
-    out_codes, out_len, out_states = _gather_codes(
+    out_codes, out_len, out_states, out_offs, out_widths = _gather_codes(
         st, lay, codes, lengths, c=c, l=l
     )
     return ContigSet(
         codes=out_codes,
         lengths=out_len,
         states=out_states,
+        offsets=out_offs,
+        widths=out_widths,
         n_contigs=int(lay["n_contigs"]),
         stats={
             "n_branch_cut": int(st["n_branch_cut"]),
@@ -394,15 +453,33 @@ def _reference_contig_gen(s_mat, codes, lengths, contained=None) -> ContigSet:
     out = np.zeros((c, lmax), np.uint8)
     lens = np.zeros(c, np.int32)
     states = np.full((c, mmax), -1, np.int32)
+    offs = np.zeros((c, mmax), np.int32)
+    widths = np.zeros((c, mmax), np.int32)
+    # materialize_contigs appends isolated singletons after the chain contigs,
+    # so chains[i] is the provenance of contigs[i] and every later contig is a
+    # single full-read piece at offset 0
     for i, ct in enumerate(contigs):
         out[i, : ct.length] = ct.codes
         lens[i] = ct.length
         for t, (r, s) in enumerate(ct.reads):
             states[i, t] = 2 * r + s
+        if i < len(chains):
+            off = 0
+            for t, (state, suf) in enumerate(chains[i]):
+                w = int(lengths[state >> 1]) if t == 0 else min(
+                    int(suf), int(lengths[state >> 1])
+                )
+                offs[i, t] = off
+                widths[i, t] = w
+                off += w
+        else:
+            widths[i, 0] = lens[i]
     return ContigSet(
         codes=out,
         lengths=lens,
         states=states,
+        offsets=offs,
+        widths=widths,
         n_contigs=c,
         stats={"n_branch_cut": int(n_branch_cut), "cc_iterations": 0},
     )

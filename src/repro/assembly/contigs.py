@@ -58,6 +58,27 @@ def _oriented(codes_row: np.ndarray, length: int, strand: int) -> np.ndarray:
     return (3 - r[::-1]) if strand else r
 
 
+def materialize_rows(codes, lengths, states, n_contigs: int) -> List[Contig]:
+    """Shared contig-tensor materialization: rows of ``codes``/``lengths``
+    with their ``states`` chains (−1 padded) become ``Contig`` objects —
+    used by both the draft ``ContigSet`` and the polished
+    ``ConsensusResult`` so the two can never drift apart."""
+    codes = np.asarray(codes)
+    lens = np.asarray(lengths)
+    states = np.asarray(states)
+    out: List[Contig] = []
+    for i in range(n_contigs):
+        ss = states[i][states[i] >= 0]
+        out.append(
+            Contig(
+                reads=[(int(s) >> 1, int(s) & 1) for s in ss],
+                length=int(lens[i]),
+                codes=codes[i, : lens[i]].copy(),
+            )
+        )
+    return out
+
+
 def state_edges(s_mat):
     """Host-side state-graph expansion: ``(out_edges, in_deg, has_edge)``
     where ``out_edges[u] = [(v, suffix), ...]`` over states ``u = 2·read +
@@ -206,6 +227,111 @@ def materialize_contigs(
                 )
             )
     return contigs
+
+
+def pileup_polish_host(
+    draft_codes, draft_lengths, states, offsets, widths, read_codes,
+    read_lengths, *, min_depth: int = 2,
+):
+    """Host dict-and-loop walk of the consensus pileup (DESIGN.md §2.8) —
+    the slow, obviously-correct cross-check for the ``consensus`` op's two
+    array backends (``kernels/pileup``).  Same vote semantics: votes pass
+    the local-coherence gate (read-vs-draft agreement on the ±COH_WIN
+    window) before counting, and a column is re-called to the
+    smallest-base-code argmax of its vote counts iff it has ``depth ≥
+    min_depth`` and a strict majority; otherwise the draft base is kept.
+    Returns ``(polished, depth, agree)`` numpy arrays."""
+    from ..kernels.pileup.ref import COH_DEN, COH_MIN_VALID, COH_NUM, COH_WIN
+
+    draft = np.asarray(draft_codes)
+    dlens = np.asarray(draft_lengths)
+    states = np.asarray(states)
+    offsets = np.asarray(offsets)
+    widths = np.asarray(widths)
+    rcodes = np.asarray(read_codes)
+    rlens = np.asarray(read_lengths)
+    c = draft.shape[0]
+    # data-dependent column capacity — the max contig length, not the input
+    # tensor's (backend-specific) padding; matches polish_contig_set
+    l = max(int(dlens.max(initial=0)), 1)
+    draft = draft[:, :l] if draft.shape[1] >= l else np.pad(
+        draft, ((0, 0), (0, l - draft.shape[1]))
+    )
+    counts = np.zeros((c, l, 4), np.int64)
+    for i in range(c):
+        for t in range(states.shape[1]):
+            s = int(states[i, t])
+            if s < 0:
+                continue
+            r, flip = s >> 1, s & 1
+            ln = int(rlens[r])
+            oriented = _oriented(rcodes[r], ln, flip)
+            start = int(offsets[i, t]) + int(widths[i, t]) - ln
+            for b in range(ln):
+                col = start + b
+                if not (0 <= col < l):
+                    continue
+                match = valid = 0
+                for w in range(-COH_WIN, COH_WIN + 1):
+                    if w == 0 or not (0 <= b + w < ln):
+                        continue
+                    if not (0 <= col + w < l):
+                        continue
+                    valid += 1
+                    match += int(oriented[b + w]) == int(draft[i, col + w])
+                if COH_DEN * match >= COH_NUM * valid and valid >= COH_MIN_VALID:
+                    counts[i, col, int(oriented[b])] += 1
+    depth = counts.sum(axis=2)
+    win = counts.max(axis=2)
+    winner = counts.argmax(axis=2)
+    change = (depth >= min_depth) & (2 * win > depth)
+    polished = np.where(change, winner, draft).astype(np.uint8)
+    agree = np.take_along_axis(
+        counts, polished[:, :, None].astype(np.int64), axis=2
+    )[:, :, 0]
+    # columns past each contig's length are padding in every backend
+    colmask = np.arange(l)[None, :] < dlens[:, None]
+    polished = np.where(colmask, polished, 0).astype(np.uint8)
+    return polished, depth.astype(np.int32), agree.astype(np.int32)
+
+
+def read_components(s_mat) -> np.ndarray:
+    """Connected components of the string graph at *read* granularity
+    (both strands of a read collapse to one vertex): ``(n,)`` int array
+    labeling each read with the minimum read id of its component.
+
+    The canonical grouping key for multi-chromosome / scaffolding output —
+    contigs whose reads share a component derive from one connected piece of
+    the assembly (``io_fasta.write_contig_fasta`` groups FASTA records by
+    it)."""
+    cols = np.asarray(s_mat.cols)
+    vals = np.asarray(s_mat.vals)
+    n = cols.shape[0]
+    parent = np.arange(n)
+
+    def find(x):
+        root = x
+        while parent[root] != root:
+            root = parent[root]
+        while parent[x] != root:
+            parent[x], x = root, parent[x]
+        return root
+
+    for i in range(n):
+        for q in range(cols.shape[1]):
+            j = int(cols[i, q])
+            if j < 0 or not np.isfinite(vals[i, q]).any():
+                continue
+            ri, rj = find(i), find(int(j))
+            if ri != rj:
+                parent[max(ri, rj)] = min(ri, rj)
+    return np.asarray([find(i) for i in range(n)])
+
+
+def contig_components(contigs: List[Contig], components: np.ndarray):
+    """Component label per contig: the component of its reads (which agree
+    by construction — a chain never crosses components)."""
+    return [int(components[c.reads[0][0]]) for c in contigs]
 
 
 def contig_stats(contigs: List[Contig]) -> ContigStats:

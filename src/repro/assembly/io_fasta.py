@@ -81,10 +81,62 @@ def pack_reads(seqs: List[str]):
     return codes, lens
 
 
+def _emit_record(f, name: str, seq: str) -> None:
+    f.write(f">{name}\n")
+    for off in range(0, len(seq), 80):
+        f.write(seq[off : off + 80] + "\n")
+
+
 def write_fasta(path: str, names, codes, lengths) -> None:
     with open(path, "w") as f:
         for i, name in enumerate(names):
             seq = "".join(BASES[int(c)] for c in codes[i][: int(lengths[i])])
-            f.write(f">{name}\n")
-            for off in range(0, len(seq), 80):
-                f.write(seq[off : off + 80] + "\n")
+            _emit_record(f, name, seq)
+
+
+def write_contig_fasta(
+    path: str, contigs, components=None, identity=None, depth=None,
+) -> int:
+    """Write assembled contigs grouped by string-graph connected component,
+    with per-component assembly stats in every header (the first slice of
+    the scaffolding / multi-chromosome workload: one genome piece = one
+    record group).
+
+    ``components``: per-contig component labels (``contigs.read_components``
+    + ``contig_components``); contigs of one component are emitted
+    consecutively, components ordered by label.  ``identity``/``depth``:
+    optional per-contig consensus identity estimate and mean pileup depth
+    (``ConsensusResult``) appended to headers.  Returns the number of
+    records written."""
+    from .contigs import contig_stats
+
+    comp = (
+        list(components)
+        if components is not None
+        else [0] * len(contigs)
+    )
+    groups = {}
+    for idx, c in enumerate(comp):
+        groups.setdefault(c, []).append(idx)
+    n_written = 0
+    with open(path, "w") as f:
+        for rank, c in enumerate(sorted(groups)):
+            idxs = groups[c]
+            cs = contig_stats([contigs[i] for i in idxs])
+            tag = (
+                f"component={rank} comp_contigs={cs.n_contigs} "
+                f"comp_total={cs.total_length} comp_n50={cs.n50}"
+            )
+            for k, i in enumerate(idxs):
+                ct = contigs[i]
+                hdr = (
+                    f"contig_{rank}_{k} length={ct.length} "
+                    f"reads={len(ct.reads)} {tag}"
+                )
+                if identity is not None:
+                    hdr += f" identity={float(identity[i]):.4f}"
+                if depth is not None:
+                    hdr += f" depth={float(depth[i]):.1f}"
+                _emit_record(f, hdr, "".join(BASES[int(x)] for x in ct.codes))
+                n_written += 1
+    return n_written

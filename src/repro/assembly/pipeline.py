@@ -3,6 +3,7 @@
     reads → k-mer count/select → A, Aᵀ → C = A·Aᵀ (overlap semiring)
           → x-drop alignment on nnz(C) → prune by score → R
           → transitive reduction (Algorithm 2) → S → contigs
+          → consensus (pileup polish, DESIGN.md §2.8)
 
 Every stage is the JAX/TPU adaptation documented in DESIGN.md §2; stages are
 individually jitted, and the overlap SpGEMM + transitive reduction can run
@@ -13,6 +14,7 @@ collected for the Fig. 5–8 style breakdown benchmark.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, Dict, Optional
 
@@ -29,6 +31,7 @@ from ..core.transitive_reduction import (
     transitive_reduction_fused,
 )
 from . import alignment as al
+from .consensus import polish_contig_set
 from .contig_gen import generate_contigs
 from .contigs import contig_stats
 from .counter import build_matrices, count_and_select
@@ -60,6 +63,11 @@ class PipelineConfig:
     tr_max_iters: int = 8
     fused_tr: bool = True  # beyond-paper sampled square (DESIGN.md §2)
     align_chunk: int = 4096
+    # consensus polishing of the contig tensor (DESIGN.md §2.8)
+    polish: bool = True
+    min_depth: int = 2  # pileup votes required before a column is re-called
+    pileup_band: int = 512  # contig columns per pileup kernel block
+    junction_radius: int = 12  # chain-junction refinement shift search radius
     # kernel backend for the hot ops (x-drop extension, min-plus squares):
     # "auto" = compiled Pallas on TPU, reference jnp elsewhere (DESIGN.md §2.5)
     backend: str = "auto"
@@ -69,10 +77,18 @@ class PipelineConfig:
 class AssemblyResult:
     r_graph: Any  # overlap matrix R (EllMatrix)
     s_graph: Any  # string matrix S (EllMatrix)
-    contigs: list
+    contigs: list  # draft contigs (raw read concatenation)
     stats: Dict[str, Any]
     timings: Dict[str, float]
     contained: Any = None  # (n,) bool, reads dropped as contained
+    consensus: Any = None  # ConsensusResult when cfg.polish (DESIGN.md §2.8)
+
+    @functools.cached_property
+    def polished_contigs(self) -> list:
+        """Consensus-polished contigs (materialized once from the polished
+        tensor); falls back to the draft when the polish stage was
+        disabled."""
+        return self.consensus.to_contigs() if self.consensus else self.contigs
 
 
 def _tic(timings, key, t0, out=None):
@@ -233,12 +249,26 @@ def assemble(codes, lengths, cfg: PipelineConfig = PipelineConfig()) -> Assembly
     )
     contigs = cset.to_contigs()
     cs = contig_stats(contigs)
-    _tic(timings, "Contigs", t0, cset.codes)
+    t0 = _tic(timings, "Contigs", t0, cset.codes)
     stats["contigs"] = dataclasses.asdict(cs)
     stats["n_branch_cut"] = cset.stats["n_branch_cut"]
     stats["cc_iterations"] = cset.stats["cc_iterations"]
 
+    # --- Consensus: pileup polishing of the contig tensor (§2.8) ---
+    cres = None
+    if cfg.polish:
+        cres = polish_contig_set(
+            cset, codes, lengths, backend=backend, min_depth=cfg.min_depth,
+            band=cfg.pileup_band, junction_radius=cfg.junction_radius,
+        )
+        _tic(timings, "Consensus", t0, cres.codes)
+        stats["consensus_depth_mean"] = cres.stats["consensus_depth_mean"]
+        stats["identity_estimate"] = cres.stats["identity_estimate"]
+        stats["qv_estimate"] = cres.stats["qv_estimate"]
+        stats["consensus_changed"] = cres.stats["n_changed"]
+        stats["n_junction_shifted"] = cres.stats["n_junction_shifted"]
+
     return AssemblyResult(
         r_graph=r_mat, s_graph=s_mat, contigs=contigs, stats=stats,
-        timings=timings, contained=contained,
+        timings=timings, contained=contained, consensus=cres,
     )

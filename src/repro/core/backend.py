@@ -40,6 +40,13 @@ Current ops
     ``assembly/contigs.py``, ``pallas`` the device array path in
     ``assembly/contig_gen.py``; both must produce identical contigs
     (asserted chain-by-chain by ``tests/test_contigs.py``).
+``consensus``
+    ``(draft, pieces, start, plen, *, min_depth, band, interpret) ->
+    (polished, depth, agree)`` — the banded pileup + majority-vote hot loop
+    of the consensus stage (DESIGN.md §2.8): ``reference`` is the jnp
+    scatter-add oracle, ``pallas`` the column-banded VMEM accumulation
+    kernel; integer counts make the parity exact
+    (``tests/test_consensus.py``).
 """
 
 from __future__ import annotations

@@ -1,0 +1,1 @@
+from .ops import pileup_vote, pileup_vote_ref  # noqa: F401

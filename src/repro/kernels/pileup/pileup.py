@@ -1,0 +1,149 @@
+"""Pallas TPU kernel: banded pileup accumulation + majority vote (consensus).
+
+Hardware adaptation (DESIGN.md §2.8): the full base-count pileup tensor
+``(n_contigs, max_len, 4)`` would be the largest array in the pipeline, so it
+is never materialized in HBM — the grid tiles it as (contig, column-band)
+blocks and each program accumulates a ``(4, band)`` int32 count block in
+VMEM/VREGs by looping over the contig's pieces (fixed trip count M, the
+chain-capacity padding of ``ContigSet``).  Each piece contributes via a
+banded ``take_along_axis`` gather of its oriented bases (the same VMEM
+sequence-staging pattern as the x-drop wavefront kernel), and the vote
+epilogue (argmax + strict-majority + min-depth gating) runs on the block
+before only the three ``(band,)`` result lanes are written back.
+
+Counts are integers and the tie-break is first-max-wins, so the kernel is
+bit-for-bit identical to the jnp oracle in ``ref.py`` — the parity contract
+of the ``consensus`` op (DESIGN.md §2.5).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...core.backend import resolve_interpret
+from .ref import COH_DEN, COH_MIN_VALID, COH_NUM, COH_WIN
+
+
+def _pileup_kernel(
+    draft_ref, row_ref, pieces_ref, start_ref, plen_ref,
+    pol_ref, dep_ref, agr_ref,
+    *, band: int, min_depth: int, l_full: int,
+):
+    # l_full is the UNPADDED column count: votes and coherence comparisons
+    # beyond it are invalid (bit-parity with the oracle, which never sees
+    # the band-multiple padding)
+    m, lr = pieces_ref.shape[1], pieces_ref.shape[2]
+    cols = pl.program_id(1) * band + jnp.arange(band, dtype=jnp.int32)
+    pieces = pieces_ref[0]  # (M, LR) uint8
+    draft_row = row_ref[...].astype(jnp.int32)  # (1, L) — coherence halo
+    starts = start_ref[0].astype(jnp.int32)  # (M,)
+    plens = plen_ref[0].astype(jnp.int32)
+
+    def body(t, counts):
+        s = jax.lax.dynamic_slice_in_dim(starts, t, 1)[0]
+        ln = jax.lax.dynamic_slice_in_dim(plens, t, 1)[0]
+        row = jax.lax.dynamic_slice_in_dim(
+            pieces, t, 1, axis=0
+        ).astype(jnp.int32)  # (1, LR)
+        idx = cols - s  # (B,)
+        ok = (idx >= 0) & (idx < ln) & (cols < l_full)
+        base = jnp.take_along_axis(
+            row, jnp.clip(idx, 0, lr - 1)[None, :], axis=1
+        )[0]  # (B,)
+        # coherence gate (see ref.py): the read must locally agree with the
+        # draft around the voted column, else the vote abstains
+        match = jnp.zeros((band,), jnp.int32)
+        valid = jnp.zeros((band,), jnp.int32)
+        for w in range(-COH_WIN, COH_WIN + 1):
+            if w == 0:
+                continue
+            rb = idx + w
+            cb = cols + w
+            v = (rb >= 0) & (rb < ln) & (cb >= 0) & (cb < l_full)
+            rv = jnp.take_along_axis(
+                row, jnp.clip(rb, 0, lr - 1)[None, :], axis=1
+            )[0]
+            dv = jnp.take_along_axis(
+                draft_row, jnp.clip(cb, 0, l_full - 1)[None, :], axis=1
+            )[0]
+            match = match + (v & (rv == dv)).astype(jnp.int32)
+            valid = valid + v.astype(jnp.int32)
+        ok &= (COH_DEN * match >= COH_NUM * valid) & (valid >= COH_MIN_VALID)
+        hit = (jnp.arange(4, dtype=jnp.int32)[:, None] == base[None, :]) & ok
+        return counts + hit.astype(jnp.int32)
+
+    counts = jax.lax.fori_loop(
+        0, m, body, jnp.zeros((4, band), jnp.int32)
+    )
+
+    # vote epilogue — 4 base lanes, unrolled first-max-wins (== argmax
+    # tie-break of the oracle)
+    dep = jnp.sum(counts, axis=0)
+    best = counts[0]
+    winner = jnp.zeros((band,), jnp.int32)
+    for q in range(1, 4):
+        better = counts[q] > best
+        best = jnp.where(better, counts[q], best)
+        winner = jnp.where(better, q, winner)
+    draft = draft_ref[0].astype(jnp.int32)
+    change = (dep >= min_depth) & (2 * best > dep)
+    pol = jnp.where(change, winner, draft)
+    agree = jnp.zeros((band,), jnp.int32)
+    for q in range(4):
+        agree = jnp.where(pol == q, counts[q], agree)
+    pol_ref[0] = pol.astype(jnp.uint8)
+    dep_ref[0] = dep
+    agr_ref[0] = agree
+
+
+@functools.partial(
+    jax.jit, static_argnames=("min_depth", "band", "interpret")
+)
+def pileup_pallas(
+    draft, pieces, start, plen, *, min_depth: int = 2, band: int = 512,
+    interpret: bool | str = "auto",
+):
+    """draft (C, L) uint8, pieces (C, M, LR) uint8, start/plen (C, M) int32
+    -> (polished (C, L) uint8, depth (C, L) i32, agree (C, L) i32).
+
+    ``interpret="auto"`` compiles on TPU and interprets elsewhere."""
+    interpret = resolve_interpret(interpret)
+    c, l = draft.shape
+    m, lr = pieces.shape[1], pieces.shape[2]
+    b = min(band, l)
+    lp = -(-l // b) * b
+    if lp != l:
+        draft = jnp.pad(draft, ((0, 0), (0, lp - l)))
+    grid = (c, lp // b)
+    kernel = functools.partial(
+        _pileup_kernel, band=b, min_depth=min_depth, l_full=l
+    )
+    blk = pl.BlockSpec((1, b), lambda i, j: (i, j))
+    # the draft goes in twice: banded (the vote fallback for this block) and
+    # as the whole row (the ±COH_WIN coherence halo crosses band boundaries)
+    pol, dep, agr = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            blk,
+            pl.BlockSpec((1, lp), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, m, lr), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, m), lambda i, j: (i, 0)),
+        ],
+        out_specs=[blk, blk, blk],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, lp), jnp.uint8),
+            jax.ShapeDtypeStruct((c, lp), jnp.int32),
+            jax.ShapeDtypeStruct((c, lp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        draft, draft, pieces, start.astype(jnp.int32),
+        plen.astype(jnp.int32),
+    )
+    return pol[:, :l], dep[:, :l], agr[:, :l]

@@ -1,0 +1,89 @@
+"""Pure-jnp oracle for the banded pileup-vote consensus op (DESIGN.md §2.8).
+
+Semantics (shared bit-for-bit with the Pallas kernel):
+
+* every piece scatters its oriented read bases onto contig columns
+  ``offset_of_base_b = start + b``; each in-range base adds one vote to
+  ``counts[contig, column, base]`` — but only if the vote is *coherent*: in
+  the ±``COH_WIN`` column window around it (center excluded) the read must
+  match the draft on ≥ ``COH_NUM/COH_DEN`` of the positions where both are
+  defined, with at least ``COH_MIN_VALID`` such positions.  A read whose
+  placement has drifted relative to the draft (indel errors accumulate a
+  random walk away from each read's anchor) fails the gate and abstains,
+  so incoherent pileups degrade to "keep the draft" instead of flipping
+  columns on correlated-drift noise;
+* the polished base of a column is ``argmax(counts)`` (ties resolve to the
+  smallest base code, the jnp/np argmax convention) — applied only where the
+  column has ``depth ≥ min_depth`` votes *and* the winner holds a strict
+  majority (``2·win > depth``); otherwise the draft base is kept;
+* ``agree`` is the vote count of the *final* base (winner where the vote
+  applied, draft base elsewhere) — the numerator of the per-column identity
+  estimate.
+
+All quantities are integer counts, so oracle/kernel parity is exact.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# vote-coherence gate (shared by oracle, kernel, and host walk)
+COH_WIN = 4  # columns inspected on each side of a vote
+COH_NUM, COH_DEN = 3, 4  # accept iff COH_DEN·matches ≥ COH_NUM·valid
+COH_MIN_VALID = 4  # and at least this many comparable positions
+
+
+def _vote(counts, draft, *, min_depth: int):
+    """Shared vote epilogue: counts (..., 4) int32, draft (...) uint8."""
+    depth = jnp.sum(counts, axis=-1)
+    win = jnp.max(counts, axis=-1)
+    winner = jnp.argmax(counts, axis=-1).astype(jnp.uint8)
+    change = (depth >= min_depth) & (2 * win > depth)
+    polished = jnp.where(change, winner, draft)
+    agree = jnp.take_along_axis(
+        counts, polished.astype(jnp.int32)[..., None], axis=-1
+    )[..., 0]
+    return polished, depth, agree
+
+
+def pileup_vote_ref(draft, pieces, start, plen, *, min_depth: int = 2):
+    """draft (C, L) uint8, pieces (C, M, LR) uint8 (oriented, zero-padded),
+    start (C, M) int32 (column of piece base 0, may be negative), plen
+    (C, M) int32 -> (polished (C, L) uint8, depth (C, L) i32, agree (C, L)
+    i32).
+
+    Scatter-add accumulation; the M axis is reduced in chunks so the
+    (C, chunk, LR) index tensors stay bounded.
+    """
+    c, l = draft.shape
+    m, lr = pieces.shape[1], pieces.shape[2]
+    counts = jnp.zeros((c, l + 1, 4), jnp.int32)
+    rows = jnp.arange(c, dtype=jnp.int32)[:, None, None]
+    b = jnp.arange(lr, dtype=jnp.int32)[None, None, :]
+    di = draft.astype(jnp.int32)
+    step = max(1, min(m, (1 << 22) // max(c * lr, 1)))
+    for m0 in range(0, m, step):
+        pc = pieces[:, m0 : m0 + step].astype(jnp.int32)
+        pl_ = plen[:, m0 : m0 + step, None]
+        col = start[:, m0 : m0 + step, None] + b
+        ok = (b < pl_) & (col >= 0) & (col < l)
+        # coherence gate: read-vs-draft agreement on the ±COH_WIN window
+        match = jnp.zeros(col.shape, jnp.int32)
+        valid = jnp.zeros(col.shape, jnp.int32)
+        for w in range(-COH_WIN, COH_WIN + 1):
+            if w == 0:
+                continue
+            rb = b + w
+            cb = col + w
+            v = (rb >= 0) & (rb < pl_) & (cb >= 0) & (cb < l)
+            rv = jnp.take_along_axis(pc, jnp.clip(rb, 0, lr - 1), axis=2)
+            dv = jnp.take_along_axis(
+                di[:, None, :], jnp.clip(cb, 0, l - 1), axis=2
+            )
+            match = match + (v & (rv == dv)).astype(jnp.int32)
+            valid = valid + v.astype(jnp.int32)
+        ok &= (COH_DEN * match >= COH_NUM * valid) & (valid >= COH_MIN_VALID)
+        counts = counts.at[
+            rows, jnp.where(ok, col, l), jnp.clip(pc, 0, 3)
+        ].add(ok.astype(jnp.int32))
+    return _vote(counts[:, :l], draft, min_depth=min_depth)

@@ -54,7 +54,7 @@ def test_resolution_and_registry():
     assert resolve_interpret(False) is False
     with pytest.raises(ValueError):
         resolve_backend("cuda")
-    for op in ("xdrop_extend", "minplus_dense"):
+    for op in ("xdrop_extend", "minplus_dense", "contig_gen", "consensus"):
         assert available_backends(op) == ("pallas", "reference")
         assert callable(dispatch(op, "reference"))
         assert callable(dispatch(op, "pallas"))
@@ -71,6 +71,25 @@ def test_golden_assembly_backend_parity(both_results):
     assert res_ref.stats["contigs"] == res_pal.stats["contigs"]
     for key in ("n_aligned", "n_passed", "nnz_R", "nnz_S", "tr_iterations"):
         assert res_ref.stats[key] == res_pal.stats[key], key
+    # the consensus stage rides the same parity contract (DESIGN.md §2.8):
+    # identical polished tensors and quality stats per backend
+    for key in ("consensus_depth_mean", "identity_estimate",
+                "consensus_changed", "n_junction_shifted"):
+        assert res_ref.stats[key] == res_pal.stats[key], key
+    a, b = res_ref.consensus, res_pal.consensus
+    n = a.n_contigs
+    assert n == b.n_contigs
+    # contig-tensor padding differs per backend (exact vs pow2 staging);
+    # the live rows must agree exactly
+    assert np.array_equal(
+        np.asarray(a.lengths)[:n], np.asarray(b.lengths)[:n]
+    )
+    pc_ref, pc_pal = a.to_contigs(), b.to_contigs()
+    assert len(pc_ref) == len(pc_pal)
+    for x, y in zip(pc_ref, pc_pal):
+        assert x.reads == y.reads
+        assert x.length == y.length
+        assert np.array_equal(x.codes, y.codes)
 
 
 def test_alignment_candidates_compacted(both_results):

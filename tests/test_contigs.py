@@ -46,7 +46,24 @@ def _assert_parity(s_mat, codes, lengths, contained=None):
         assert np.array_equal(a.codes, b.codes)
     assert contig_stats(rc) == contig_stats(dc)
     assert ref.stats["n_branch_cut"] == dev.stats["n_branch_cut"]
+    _assert_provenance_parity(ref, dev)
     return rc, dev
+
+
+def _assert_provenance_parity(ref, dev):
+    """Per-piece (offset, width) provenance — consumed by the consensus stage
+    (DESIGN.md §2.8) — must agree piece-by-piece across backends, and pieces
+    must tile each contig exactly (offset = running sum of widths, total =
+    contig length)."""
+    rs, ds = np.asarray(ref.states), np.asarray(dev.states)
+    ro, do_ = np.asarray(ref.offsets), np.asarray(dev.offsets)
+    rw, dw = np.asarray(ref.widths), np.asarray(dev.widths)
+    for i in range(ref.n_contigs):
+        k = int((rs[i] >= 0).sum())
+        assert np.array_equal(ro[i, :k], do_[i, :k])
+        assert np.array_equal(rw[i, :k], dw[i, :k])
+        assert np.array_equal(ro[i, :k], np.cumsum(rw[i, :k]) - rw[i, :k])
+        assert int(rw[i, :k].sum()) == int(np.asarray(ref.lengths)[i])
 
 
 SCENARIOS = {

@@ -30,3 +30,49 @@ def test_sharded_reading_partitions_records(tmp_path):
         n, c, l = read_fasta_sharded(path, shard, 4)
         got.extend(n)
     assert got == names  # every record exactly once, in order
+
+
+def test_component_grouped_contigs(tmp_path):
+    """write_contig_fasta groups records by string-graph component and
+    carries per-component stats (and optional consensus evidence) in every
+    header; read_components labels the graph's connected pieces."""
+    from repro.assembly.contig_gen import string_matrix_from_edges
+    from repro.assembly.contigs import (
+        Contig, contig_components, read_components,
+    )
+    from repro.assembly.io_fasta import write_contig_fasta
+
+    # two disjoint chains: reads {0,1,2} and {3,4}
+    s = string_matrix_from_edges(
+        5, [(0, 1, 0, 0, 10), (1, 2, 0, 0, 10), (3, 4, 0, 0, 10)]
+    )
+    comp = read_components(s)
+    assert list(comp) == [0, 0, 0, 3, 3]
+
+    rng = np.random.default_rng(0)
+    contigs = [
+        Contig(reads=[(0, 0), (1, 0), (2, 0)], length=40,
+               codes=rng.integers(0, 4, 40).astype(np.uint8)),
+        Contig(reads=[(3, 0), (4, 0)], length=25,
+               codes=rng.integers(0, 4, 25).astype(np.uint8)),
+        Contig(reads=[(2, 1)], length=12,
+               codes=rng.integers(0, 4, 12).astype(np.uint8)),
+    ]
+    labels = contig_components(contigs, comp)
+    assert labels == [0, 3, 0]
+    path = str(tmp_path / "c.fasta")
+    n = write_contig_fasta(path, contigs, labels,
+                           identity=[0.99, 0.98, 1.0], depth=[4.0, 2.0, 1.0])
+    assert n == 3
+    names, c2, l2 = read_fasta_sharded(path)
+    assert len(names) == 3
+    # component 0's two contigs are adjacent, component 3's record follows
+    assert [h.split()[0] for h in names] == [
+        "contig_0_0", "contig_0_1", "contig_1_0"
+    ]
+    assert "comp_contigs=2" in names[0] and "comp_total=52" in names[0]
+    assert "comp_contigs=1" in names[2] and "comp_n50=25" in names[2]
+    assert "identity=0.9900" in names[0] and "depth=4.0" in names[0]
+    # sequences survive the round trip grouped-order permutation
+    np.testing.assert_array_equal(c2[0][: l2[0]], contigs[0].codes)
+    np.testing.assert_array_equal(c2[2][: l2[2]], contigs[1].codes)

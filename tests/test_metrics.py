@@ -1,0 +1,75 @@
+"""Truth-based quality metrics (assembly/metrics.py): banded edit distance
+against a full-DP oracle, and contig-to-genome interval mapping."""
+
+import numpy as np
+
+from repro.assembly.contigs import Contig
+from repro.assembly.metrics import (
+    assembly_identity,
+    banded_edit_distance,
+    contig_identity_vs_truth,
+    contig_truth_interval,
+    identity,
+)
+from repro.assembly.simulate import simulate_genome, simulate_reads
+
+
+def _full_edit(a, b):
+    la, lb = len(a), len(b)
+    dp = np.zeros((la + 1, lb + 1), int)
+    dp[:, 0] = np.arange(la + 1)
+    dp[0, :] = np.arange(lb + 1)
+    for i in range(1, la + 1):
+        for j in range(1, lb + 1):
+            dp[i, j] = min(
+                dp[i - 1, j] + 1, dp[i, j - 1] + 1,
+                dp[i - 1, j - 1] + (a[i - 1] != b[j - 1]),
+            )
+    return dp[la, lb]
+
+
+def test_banded_matches_full_dp():
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        a = rng.integers(0, 4, int(rng.integers(0, 80)))
+        b = rng.integers(0, 4, int(rng.integers(0, 80)))
+        assert banded_edit_distance(a, b, band=96) == _full_edit(a, b)
+
+
+def test_banded_exact_on_mutated_copy():
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, 4, 400)
+    b = list(a)
+    for _ in range(16):
+        p = int(rng.integers(0, len(b)))
+        r = rng.random()
+        if r < 0.5:
+            b[p] = (b[p] + 1) % 4
+        elif r < 0.75:
+            del b[p]
+        else:
+            b.insert(p, int(rng.integers(0, 4)))
+    b = np.asarray(b)
+    assert banded_edit_distance(a, b, band=32) == _full_edit(a, b)
+    assert identity(a, a) == 1.0
+    assert identity(a, b) < 1.0
+
+
+def test_contig_truth_mapping():
+    rng = np.random.default_rng(2)
+    g = simulate_genome(rng, 2000)
+    rs = simulate_reads(g, depth=6, mean_len=300, std_len=40,
+                        error_rate=0.0, seed=3)
+    # a perfect "contig": an exact slice of the genome spanning two reads
+    r0, r1 = 0, 1
+    lo = int(min(rs.truth_start[r0], rs.truth_start[r1]))
+    hi = int(max(rs.truth_end[r0], rs.truth_end[r1]))
+    c = Contig(
+        reads=[(r0, int(rs.truth_strand[r0])), (r1, int(rs.truth_strand[r1]))],
+        length=hi - lo,
+        codes=g[lo:hi].copy(),
+    )
+    assert contig_truth_interval(c, rs)[:2] == (lo, hi)
+    assert contig_identity_vs_truth(c, rs) == 1.0
+    ident, nbases = assembly_identity([c], rs)
+    assert ident == 1.0 and nbases == hi - lo
