@@ -6,7 +6,13 @@ extension, min-plus squares) through the Pallas kernels via the dispatch
 layer (compiled on TPU, interpret elsewhere) and runs the device contig
 path (DESIGN.md §2.7).
 
-Standalone: ``python -m benchmarks.bench_breakdown --backend pallas``.
+With ``--distribution shard_map`` (or ``both``) an extra pipeline run uses
+the explicit-exchange contig doubling (§2.9) and emits a ``contig_comm``
+row: measured per-device/per-round exchange volume next to the analytic
+model from ``bench_comm_model.words_contig_doubling``.
+
+Standalone: ``python -m benchmarks.bench_breakdown --backend pallas
+--distribution both``.
 """
 
 from __future__ import annotations
@@ -14,7 +20,7 @@ from __future__ import annotations
 import numpy as np
 
 
-def run(backends=("reference", "pallas")):
+def run(backends=("reference", "pallas"), distributions=("gspmd",)):
     from repro.assembly.pipeline import PipelineConfig, assemble
     from repro.assembly.simulate import simulate_genome, simulate_reads
 
@@ -54,20 +60,51 @@ def run(backends=("reference", "pallas")):
              f"changed={res.stats['consensus_changed']};"
              f"junction_shifts={res.stats['n_junction_shifted']}")
         )
+
+    if "shard_map" in distributions:
+        # §2.9 communication check: explicit-exchange contig doubling,
+        # measured per-device exchange volume vs the analytic model
+        import jax
+
+        from .bench_comm_model import words_contig_doubling
+
+        cfg = PipelineConfig(m_capacity=1 << 16, upper=48, read_capacity=128,
+                             overlap_capacity=48, r_capacity=32, band=33,
+                             max_steps=2048, align_chunk=8192,
+                             backend="pallas", distribution="shard_map")
+        res = assemble(rs.codes, rs.lengths, cfg)
+        p = len(jax.devices())
+        n_states = 2 * res.stats["n_reads"]
+        measured = res.stats["exchange_words"]
+        rounds = res.stats["exchange_rounds"]
+        model = words_contig_doubling(n_states, p, rounds)
+        per_round = measured // max(rounds, 1)
+        rows.append(
+            (f"breakdown[pallas/shard_map]/contig_comm",
+             res.timings["Contigs"] * 1e6,
+             f"P={p};rounds={rounds};exchange_words={measured};"
+             f"words_per_round={per_round};model_words={model};"
+             f"model_words_logn={words_contig_doubling(n_states, p)}")
+        )
     return rows
 
 
 def main() -> None:
+    """CLI entry point (CSV on stdout)."""
     import argparse
 
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--backend", default="both",
                    choices=["reference", "pallas", "both"])
+    p.add_argument("--distribution", default="gspmd",
+                   choices=["gspmd", "shard_map", "both"])
     ns = p.parse_args()
     backends = (("reference", "pallas") if ns.backend == "both"
                 else (ns.backend,))
+    dists = (("gspmd", "shard_map") if ns.distribution == "both"
+             else (ns.distribution,))
     print("name,us_per_call,derived")
-    for name, us, derived in run(backends=backends):
+    for name, us, derived in run(backends=backends, distributions=dists):
         print(f"{name},{us:.1f},{derived}", flush=True)
 
 

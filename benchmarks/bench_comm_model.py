@@ -1,12 +1,24 @@
-"""Table I reproduction: 1D vs 2D communication cost models.
+"""Table I reproduction: 1D vs 2D communication cost models, plus the
+contig-stage doubling model (DESIGN.md §2.9, docs/communication.md).
 
 Evaluates the paper's §V formulas with the measured dataset constants
 (Table III/IV) across P = 64..16384 and locates the crossover where the 2D
 algorithm wins — the paper's claim is 2D wins for "commonly utilized
 concurrencies in the range of 100–10000 processors".
+
+``words_contig_doubling`` is the analytic per-device exchange volume of the
+shard_map contig doubling middle (core/components_dist.py): each round ring-
+all-gathers 2n-state vectors at ``n·(P−1)/P`` words per vector, with
+``rounds ≈ 3·(⌈log₂ 2n⌉+1)`` (one log term per phase: break_cycles,
+path_components, chain_rank) and ≈3 gathers per round (the 2/4/2 per-phase
+counts of ``components_dist.GATHERS_PER_ROUND``, mean 8/3, rounded up).
+bench_contigs and bench_breakdown print the *measured* ``exchange_words``
+stat next to this model so the two stay cross-checked.
 """
 
 from __future__ import annotations
+
+import math
 
 
 # Table IV (H. sapiens): n reads, l read length; Table III densities.
@@ -32,9 +44,26 @@ def words_2d(ds, p):
     return ov + rx + tr
 
 
+def words_contig_doubling(n_states, p, rounds=None):
+    """Per-device words exchanged by the shard_map doubling middle: one ring
+    all-gather (``n·(P−1)/P`` words) per gather-round.  ``rounds`` defaults
+    to the analytic O(log n) total over the three doubling phases (the
+    measured counterpart is ``ContigSet.stats['exchange_rounds']``)."""
+    if rounds is None:
+        log_rounds = max(1, math.ceil(math.log2(max(n_states, 2)))) + 1
+        rounds = 3 * log_rounds  # break_cycles + path_components + chain_rank
+    # gathers per round averaged over phases ≈ 3 (2 bc / 4 pc / 2 cr, see
+    # components_dist.GATHERS_PER_ROUND — the model rounds the 8/3 mean up)
+    return 3 * rounds * (n_states * (p - 1) // max(p, 1))
+
+
 def run():
     rows = []
     for name, ds in DATASETS.items():
+        for p in (4, 16, 64, 256):
+            w = words_contig_doubling(2 * ds["n"], p)
+            rows.append((f"comm_model/{name}/contig_doubling/P{p}", 0.0,
+                         f"Wdoubling={w:.3e};scaling=(P-1)/P·log2n"))
         crossover = None
         for p in (64, 128, 256, 512, 1024, 2048, 4096, 8192, 16384):
             w1, w2 = words_1d(ds, p), words_2d(ds, p)

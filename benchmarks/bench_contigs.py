@@ -1,10 +1,22 @@
-"""Contigs-stage race: host walk (reference) vs device path (DESIGN.md §2.7).
+"""Contigs-stage race: host walk (reference) vs device path (DESIGN.md §2.7),
+with a distribution axis (§2.9) and a fused-cc-kernel section.
 
 String graphs are synthesized directly — long unitig chains with their
 reverse-complement twins, a sprinkle of branch vertices, and isolated reads —
 so the sweep isolates contig generation from the rest of the pipeline.
 
-Standalone: ``python -m benchmarks.bench_contigs --backend pallas``.
+Rows:
+  * ``contigs[backend/distribution]/nN`` — the device path under
+    ``distribution="gspmd"`` (auto-sharded) vs ``"shard_map"`` (explicit
+    ppermute/psum doubling); shard_map rows report the per-device exchange
+    volume next to the model prediction from ``bench_comm_model``.
+  * ``cc[backend]/nN`` — the hook/shortcut component rounds through the
+    ``cc_labels`` op: jnp oracle (one HBM round trip per round) vs fused
+    Pallas kernel (one per 8-round chunk); derived column reports both trip
+    counts.
+
+Standalone: ``python -m benchmarks.bench_contigs --backend pallas
+--distribution both``.
 """
 
 from __future__ import annotations
@@ -36,11 +48,28 @@ def _string_graph(n, seed):
     return string_matrix_from_edges(n, edges, capacity=8)
 
 
-def run(backends=("reference", "pallas"), sweep=(256, 1024, 4096)):
+def _time(f, out_of):
+    """Wall-clock one warm-up + 3 timed reps of ``f``; sync via ``out_of``."""
     import jax
 
-    from repro.assembly.contig_gen import generate_contigs
+    res = f()  # warm-up / compile
+    reps = 3
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(jax.tree.leaves(out_of(f())))
+    return res, (time.perf_counter() - t0) / reps * 1e6
 
+
+def run(backends=("reference", "pallas"), sweep=(256, 1024, 4096),
+        distributions=("gspmd",)):
+    from repro.assembly.contig_gen import generate_contigs
+    from repro.core.components import connected_components, expand_states
+    from repro.core.components_dist import default_row_mesh
+    from repro.kernels.cc import fused_path_fits, hbm_round_trips
+
+    from .bench_comm_model import words_contig_doubling
+
+    mesh = default_row_mesh() if "shard_map" in distributions else None
     rows = []
     for n in sweep:
         s = _string_graph(n, seed=n)
@@ -49,35 +78,70 @@ def run(backends=("reference", "pallas"), sweep=(256, 1024, 4096)):
         lengths = rng.integers(150, 250, n).astype(np.int32)
         base = None
         for backend in backends:
-            def f():
-                return generate_contigs(s, codes, lengths, backend=backend)
+            dists = distributions if backend != "reference" else ("gspmd",)
+            for dist in dists:
+                cset, us = _time(
+                    lambda: generate_contigs(
+                        s, codes, lengths, backend=backend,
+                        distribution=dist, mesh=mesh,
+                    ),
+                    out_of=lambda c: c.codes,
+                )
+                if backend == "reference":
+                    base = us
+                derived = f"n_contigs={cset.n_contigs}"
+                if base is not None and backend != "reference":
+                    derived += f";speedup_vs_reference={base / us:.1f}x"
+                if dist == "shard_map":
+                    p = len(np.ravel(mesh.devices))
+                    model = words_contig_doubling(
+                        2 * n, p, cset.stats["exchange_rounds"]
+                    )
+                    derived += (
+                        f";exchange_words={cset.stats['exchange_words']}"
+                        f";model_words={model}"
+                    )
+                tag = backend if dist == "gspmd" else f"{backend}/{dist}"
+                rows.append((f"contigs[{tag}]/n{n}", us, derived))
 
-            cset = f()  # warm-up / compile
-            reps = 3
-            t0 = time.perf_counter()
-            for _ in range(reps):
-                jax.block_until_ready(jax.tree.leaves(f().codes))
-            us = (time.perf_counter() - t0) / reps * 1e6
-            if backend == "reference":
-                base = us
-            derived = f"n_contigs={cset.n_contigs}"
-            if base is not None and backend != "reference":
-                derived += f";speedup_vs_reference={base / us:.1f}x"
-            rows.append((f"contigs[{backend}]/n{n}", us, derived))
+        # fused cc kernel vs oracle on the same state graph.  The pallas
+        # backend falls back to the oracle above its VMEM budget — then its
+        # HBM trips are one per round, not per chunk (fused_path_fits).
+        g = expand_states(s)
+        fused = bool(fused_path_fits(g.cols))
+        for backend in backends:
+            (labels, iters), us = _time(
+                lambda: connected_components(g, backend=backend),
+                out_of=lambda r: r[0],
+            )
+            if backend == "reference" or not fused:
+                trips = int(iters)
+            else:
+                trips = hbm_round_trips(int(iters))
+            rows.append((
+                f"cc[{backend}]/n{n}", us,
+                f"iters={int(iters)};hbm_round_trips={trips}"
+                + ("" if backend == "reference" else f";fused={fused}"),
+            ))
     return rows
 
 
 def main() -> None:
+    """CLI entry point (CSV on stdout, one row per backend×distribution)."""
     import argparse
 
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--backend", default="both",
                    choices=["reference", "pallas", "both"])
+    p.add_argument("--distribution", default="gspmd",
+                   choices=["gspmd", "shard_map", "both"])
     ns = p.parse_args()
     backends = (("reference", "pallas") if ns.backend == "both"
                 else (ns.backend,))
+    dists = (("gspmd", "shard_map") if ns.distribution == "both"
+             else (ns.distribution,))
     print("name,us_per_call,derived")
-    for name, us, derived in run(backends=backends):
+    for name, us, derived in run(backends=backends, distributions=dists):
         print(f"{name},{us:.1f},{derived}", flush=True)
 
 

@@ -20,9 +20,10 @@ _NAME_RE = re.compile(r"^(?P<op>[^\[/]+)(?:\[(?P<backend>[^\]]+)\])?"
                       r"(?:/(?P<shape>.*))?$")
 
 # reduced-size kwargs per module for the CI smoke run (only passed when the
-# module's run() accepts them)
+# module's run() accepts them).  contigs keeps both distribution rows so the
+# uploaded artifact tracks the gspmd-vs-shard_map trajectory (§2.9).
 _SMOKE = {
-    "contigs": {"sweep": (256,)},
+    "contigs": {"sweep": (256,), "distributions": ("gspmd", "shard_map")},
     "consensus": {"sweep": (256,)},
     "scaling": {"sweep": (256,)},
 }

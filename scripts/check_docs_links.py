@@ -1,0 +1,64 @@
+#!/usr/bin/env python
+"""Markdown link checker for the repo's docs surface.
+
+Resolves every relative ``[text](target)`` link in README.md, DESIGN.md,
+ROADMAP.md and docs/*.md against the working tree and fails if a target file
+does not exist.  External (``http(s)://``) links are syntax-checked only —
+CI must stay hermetic.  Anchors (``file.md#section``) are checked for the
+file part.
+
+    python scripts/check_docs_links.py [files...]
+
+Exit status 1 with one ``path: broken link -> target`` per failure; CI runs
+this in the docs job, tests/test_docs.py runs it in tier-1.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+DEFAULT_TARGETS = ["README.md", "DESIGN.md", "ROADMAP.md", "docs"]
+
+# [text](target) — excludes images' alt-text brackets by allowing them too
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_file(path: Path) -> list:
+    """Return the broken relative link targets of one markdown file."""
+    broken = []
+    for target in _LINK_RE.findall(path.read_text()):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, https:, mailto:
+            continue
+        if target.startswith("#"):  # in-page anchor
+            continue
+        rel = target.split("#", 1)[0]
+        if not (path.parent / rel).exists():
+            broken.append(target)
+    return broken
+
+
+def main(argv) -> int:
+    """Check the given files/dirs (or the default docs set); 0 = clean."""
+    roots = [Path(a) for a in argv] or [REPO / t for t in DEFAULT_TARGETS]
+    files = []
+    for r in roots:
+        files.extend(sorted(r.glob("*.md")) if r.is_dir() else [r])
+    failed = 0
+    for f in files:
+        for target in check_file(f):
+            rel = f.relative_to(REPO) if f.is_absolute() else f
+            print(f"{rel}: broken link -> {target}")
+            failed += 1
+    if failed:
+        print(f"{failed} broken link(s)", file=sys.stderr)
+        return 1
+    print(f"links ok ({len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

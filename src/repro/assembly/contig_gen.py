@@ -86,9 +86,13 @@ class ContigSet:
     offsets: Any  # (C, M) int32, piece destination column
     widths: Any  # (C, M) int32, bases the piece appended
     n_contigs: int
-    stats: Dict[str, int]  # n_branch_cut, cc_iterations
+    # n_branch_cut, cc_iterations, distribution ("gspmd"|"shard_map"|"host"),
+    # and on the shard_map path exchange_words/exchange_rounds (§2.9)
+    stats: Dict[str, Any]
 
     def to_contigs(self) -> List[Contig]:
+        """Materialize the padded tensors into host ``Contig`` records (the
+        thin layer consumed by ``contig_stats``/FASTA output)."""
         return materialize_rows(
             self.codes, self.lengths, self.states, self.n_contigs
         )
@@ -155,11 +159,18 @@ def consistent_chain_graph(n, seed, *, err=0.0, break_every=None):
 
 # ---------------------------------------------------------------------------
 # Stage 1: state graph, branch cut, components, rank — fully static shapes.
+# Split into graph-cut / doubling / chain-ordering so the doubling middle can
+# swap between the local (GSPMD auto-sharded) path and the shard_map
+# explicit-exchange path (DESIGN.md §2.9) without re-tracing the rest.
 # ---------------------------------------------------------------------------
 
 
 @jax.jit
-def _chain_state(s: EllMatrix):
+def _graph_cut(s: EllMatrix):
+    """State graph + branch cut: expand S into the 2n-state graph, keep edge
+    u→v iff out-deg(u) == 1 and in-deg(v) == 1 (the 2022 paper's degree
+    filter), and emit the functional succ/pred pointer pair the doubling
+    stages consume."""
     g = expand_states(s)
     n2 = g.n_cols
     out_deg, in_deg = degrees(g)
@@ -179,17 +190,45 @@ def _chain_state(s: EllMatrix):
     pred0 = jnp.full(n2 + 1, -1, jnp.int32).at[scat].set(ids)[:n2]
     insuf = jnp.zeros(n2 + 1, jnp.float32).at[scat].set(suf)[:n2]
 
-    succ, pred, _ = break_cycles(succ0, pred0)
+    has_edge = (out_deg + in_deg).reshape(-1, 2).sum(axis=1) > 0  # per read
+    return {
+        "succ0": succ0,
+        "pred0": pred0,
+        "insuf": insuf,
+        "out_deg": out_deg,
+        "has_edge": has_edge,
+        "n_branch_cut": n_branch_cut,
+    }
 
-    # unitig labels (components of the kept-edge path graph) + in-chain rank.
-    # path_components' doubling is O(log n) for any id permutation along the
-    # chain (generic min-label propagation needs Θ(n) rounds on permuted
-    # paths and would truncate long unitigs).
+
+@jax.jit
+def _doubling_local(succ0, pred0):
+    """Local (single-jit, GSPMD-sharded) doubling middle: cut cycles, label
+    unitigs, rank states within each chain.
+
+    path_components' doubling is O(log n) for any id permutation along the
+    chain (generic min-label propagation needs Θ(n) rounds on permuted
+    paths and would truncate long unitigs)."""
+    succ, pred, _ = break_cycles(succ0, pred0)
     labels, cc_iters = path_components(succ, pred)
     head, rank, _ = chain_rank(pred)
+    return {
+        "labels": labels,
+        "head": head,
+        "rank": rank,
+        "cc_iterations": cc_iters,
+    }
+
+
+@jax.jit
+def _order_chains(cut, dbl):
+    """Group states by (unitig label, in-chain rank): eligible chains first,
+    label-ascending — the canonical chain order both backends share."""
+    out_deg, insuf = cut["out_deg"], cut["insuf"]
+    labels, head, rank = dbl["labels"], dbl["head"], dbl["rank"]
+    n2 = labels.shape[0]
     eligible = out_deg[head] > 0  # a chain emits iff its head has out-edges
 
-    # group states by (label, rank): eligible chains first, label-ascending
     order = jnp.lexsort((rank, jnp.where(eligible, labels, _BIG)))
     state_s = order.astype(jnp.int32)
     elig_s = eligible[order]
@@ -199,7 +238,6 @@ def _chain_state(s: EllMatrix):
     new_chain = elig_s & (lab_s != prev)
     chain_idx_s = jnp.cumsum(new_chain.astype(jnp.int32)) - 1
 
-    has_edge = (out_deg + in_deg).reshape(-1, 2).sum(axis=1) > 0  # per read
     return {
         "state_s": state_s,
         "elig_s": elig_s,
@@ -207,12 +245,47 @@ def _chain_state(s: EllMatrix):
         "chain_idx_s": chain_idx_s,
         "new_chain": new_chain,
         "insuf": insuf,
-        "has_edge": has_edge,
+        "has_edge": cut["has_edge"],
         "n_chains": jnp.sum(new_chain).astype(jnp.int32),
         "max_chain": jnp.max(jnp.where(elig_s, rank_s, -1)) + 1,
-        "n_branch_cut": n_branch_cut,
-        "cc_iterations": cc_iters,
+        "n_branch_cut": cut["n_branch_cut"],
+        "cc_iterations": dbl["cc_iterations"],
     }
+
+
+def _chain_state(
+    s: EllMatrix, *, distribution: str = "gspmd", mesh=None, row_axes=None
+):
+    """Stage 1 driver: graph cut → doubling middle → chain ordering.
+
+    ``distribution`` selects the doubling middle (DESIGN.md §2.9):
+    ``"gspmd"`` keeps the auto-sharded local path; ``"shard_map"`` runs the
+    explicit ``ppermute``/``psum`` exchange path of
+    ``core/components_dist.py`` over ``mesh`` (built on demand when absent).
+
+    Returns ``(st, dist_stats)``: ``st`` is the pytree the jitted layout/
+    gather stages consume (kept free of host scalars so their traces are
+    shared across calls); ``dist_stats`` holds the shard_map path's exchange
+    accounting (empty for gspmd)."""
+    cut = _graph_cut(s)
+    if distribution == "shard_map":
+        from ..core.components_dist import default_row_mesh, doubling_shard_map
+
+        if mesh is None:
+            mesh = default_row_mesh()
+        d = doubling_shard_map(
+            cut["succ0"], cut["pred0"], mesh=mesh, row_axes=row_axes
+        )
+        dbl = {k: d[k] for k in ("labels", "head", "rank")}
+        dbl["cc_iterations"] = d["cc_iterations"]
+        dist_stats = {
+            "exchange_words": int(d["exchange_words"]),
+            "exchange_rounds": int(d["cc_iterations"])
+            + int(d["cr_iterations"])
+            + d["bc_rounds"],
+        }
+        return _order_chains(cut, dbl), dist_stats
+    return _order_chains(cut, _doubling_local(cut["succ0"], cut["pred0"])), {}
 
 
 # ---------------------------------------------------------------------------
@@ -410,14 +483,26 @@ def _gather_codes(st, lay, codes, lengths, *, c, l):
 # ---------------------------------------------------------------------------
 
 
-def _device_contig_gen(s_mat, codes, lengths, contained=None) -> ContigSet:
+def _device_contig_gen(
+    s_mat, codes, lengths, contained=None, *, distribution: str = "gspmd",
+    mesh=None, row_axes=None,
+) -> ContigSet:
+    """Device array path of the ``contig_gen`` op (DESIGN.md §2.7/§2.9).
+
+    ``distribution="gspmd"`` (default) leaves partitioning to the
+    auto-sharder; ``"shard_map"`` routes the doubling middle through the
+    explicit-exchange path over ``mesh`` and surfaces the per-device
+    ``exchange_words``/``exchange_rounds`` in ``ContigSet.stats``.  Both
+    distributions produce bit-identical tensors."""
     codes = jnp.asarray(codes, jnp.uint8)
     lengths = jnp.asarray(lengths, jnp.int32)
     n = codes.shape[0]
     contained = (
         jnp.zeros(n, bool) if contained is None else jnp.asarray(contained, bool)
     )
-    st = _chain_state(s_mat)
+    st, dist_stats = _chain_state(
+        s_mat, distribution=distribution, mesh=mesh, row_axes=row_axes
+    )
     ca = next_pow2(int(st["n_chains"]))
     m = next_pow2(int(st["max_chain"]))
     lay = _chain_layout(st, lengths, contained, ca=ca, m=m)
@@ -426,6 +511,12 @@ def _device_contig_gen(s_mat, codes, lengths, contained=None) -> ContigSet:
     out_codes, out_len, out_states, out_offs, out_widths = _gather_codes(
         st, lay, codes, lengths, c=c, l=l
     )
+    stats = {
+        "n_branch_cut": int(st["n_branch_cut"]),
+        "cc_iterations": int(st["cc_iterations"]),
+        "distribution": distribution,
+        **dist_stats,
+    }
     return ContigSet(
         codes=out_codes,
         lengths=out_len,
@@ -433,15 +524,21 @@ def _device_contig_gen(s_mat, codes, lengths, contained=None) -> ContigSet:
         offsets=out_offs,
         widths=out_widths,
         n_contigs=int(lay["n_contigs"]),
-        stats={
-            "n_branch_cut": int(st["n_branch_cut"]),
-            "cc_iterations": int(st["cc_iterations"]),
-        },
+        stats=stats,
     )
 
 
-def _reference_contig_gen(s_mat, codes, lengths, contained=None) -> ContigSet:
-    """Host walk (assembly/contigs.py) packed into the ContigSet contract."""
+def _reference_contig_gen(
+    s_mat, codes, lengths, contained=None, *, distribution: str = "gspmd",
+    mesh=None, row_axes=None,
+) -> ContigSet:
+    """Host walk (assembly/contigs.py) packed into the ContigSet contract.
+
+    The distribution knobs are accepted and ignored (shared op signature):
+    the host walk is single-process by construction, so its stats report
+    ``distribution="host"`` — truthful when a ``"shard_map"`` request lands
+    on the reference backend (e.g. ``backend="auto"`` off-TPU)."""
+    del distribution, mesh, row_axes
     codes = np.asarray(codes)
     lengths = np.asarray(lengths)
     edges = state_edges(s_mat)
@@ -481,7 +578,11 @@ def _reference_contig_gen(s_mat, codes, lengths, contained=None) -> ContigSet:
         offsets=offs,
         widths=widths,
         n_contigs=c,
-        stats={"n_branch_cut": int(n_branch_cut), "cc_iterations": 0},
+        stats={
+            "n_branch_cut": int(n_branch_cut),
+            "cc_iterations": 0,
+            "distribution": "host",
+        },
     )
 
 
@@ -493,8 +594,36 @@ register_op("contig_gen", "pallas", _device_contig_gen)
 
 
 def generate_contigs(
-    s_mat, codes, lengths, contained=None, *, backend: str = "auto"
+    s_mat, codes, lengths, contained=None, *, backend: str = "auto",
+    distribution: str = "gspmd", mesh=None, row_axes=None,
 ) -> ContigSet:
     """Contigs stage entry point: dispatch the registered ``contig_gen``
-    backend (DESIGN.md §2.5) on string matrix S."""
-    return dispatch("contig_gen", backend)(s_mat, codes, lengths, contained)
+    backend (DESIGN.md §2.5) on string matrix S.
+
+    Args:
+      s_mat: the string matrix S (``EllMatrix``, MinPlus 4-vector values).
+      codes / lengths: ``(n, L)`` uint8 read bases and ``(n,)`` int32 read
+        lengths.
+      contained: optional ``(n,)`` bool — reads already dropped as contained
+        (they emit no singleton contig).
+      backend: ``"reference"`` (host walk), ``"pallas"`` (device array
+        path) or ``"auto"`` (platform detection), per DESIGN.md §2.5.
+      distribution: partitioning of the device path's doubling middle —
+        ``"gspmd"`` (auto-sharded) or ``"shard_map"`` (explicit
+        ``ppermute``/``psum`` exchanges over ``mesh``; DESIGN.md §2.9).
+        Only the device path partitions: when ``backend`` resolves to
+        ``"reference"`` the knob has no effect and the returned stats
+        report ``distribution="host"``.
+      mesh / row_axes: mesh for ``distribution="shard_map"`` (defaults: a 1D
+        mesh over all devices; grid-row axes per ``infer_row_axes``).
+
+    Returns a :class:`ContigSet`; all backend/distribution combinations
+    produce identical contigs (the §2.5 parity contract).
+    """
+    from ..core.backend import resolve_distribution
+
+    return dispatch("contig_gen", backend)(
+        s_mat, codes, lengths, contained,
+        distribution=resolve_distribution(distribution), mesh=mesh,
+        row_axes=row_axes,
+    )

@@ -71,6 +71,11 @@ class PipelineConfig:
     # kernel backend for the hot ops (x-drop extension, min-plus squares):
     # "auto" = compiled Pallas on TPU, reference jnp elsewhere (DESIGN.md §2.5)
     backend: str = "auto"
+    # distribution of the device contig path's doubling middle (DESIGN.md
+    # §2.9): "gspmd" = auto-sharded, "shard_map" = explicit ppermute/psum
+    # neighbor exchanges over `mesh` (a 1D device mesh is built when None)
+    distribution: str = "gspmd"
+    mesh: Any = None
 
 
 @dataclasses.dataclass
@@ -243,9 +248,11 @@ def assemble(codes, lengths, cfg: PipelineConfig = PipelineConfig()) -> Assembly
     stats["nnz_S"] = int(s_mat.nnz())
     stats["s_density"] = stats["nnz_S"] / max(1, int(n))
 
-    # --- Contigs (backend-dispatched: host walk or device path, §2.7) ---
+    # --- Contigs (backend-dispatched: host walk or device path, §2.7;
+    # distribution-dispatched: gspmd or shard_map doubling, §2.9) ---
     cset = generate_contigs(
-        s_mat, codes, lengths, contained, backend=backend
+        s_mat, codes, lengths, contained, backend=backend,
+        distribution=cfg.distribution, mesh=cfg.mesh,
     )
     contigs = cset.to_contigs()
     cs = contig_stats(contigs)
@@ -253,6 +260,13 @@ def assemble(codes, lengths, cfg: PipelineConfig = PipelineConfig()) -> Assembly
     stats["contigs"] = dataclasses.asdict(cs)
     stats["n_branch_cut"] = cset.stats["n_branch_cut"]
     stats["cc_iterations"] = cset.stats["cc_iterations"]
+    # what actually ran: "gspmd"/"shard_map" on the device path, "host" when
+    # the backend resolved to the reference walk (the knob then has no
+    # effect — surfaced rather than silently re-labelled)
+    stats["distribution"] = cset.stats["distribution"]
+    if "exchange_words" in cset.stats:
+        stats["exchange_words"] = cset.stats["exchange_words"]
+        stats["exchange_rounds"] = cset.stats["exchange_rounds"]
 
     # --- Consensus: pileup polishing of the contig tensor (§2.8) ---
     cres = None

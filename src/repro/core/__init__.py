@@ -13,10 +13,12 @@ from .semiring import (  # noqa: F401
 )
 from .backend import (  # noqa: F401
     BACKENDS,
+    DISTRIBUTIONS,
     available_backends,
     dispatch,
     register_op,
     resolve_backend,
+    resolve_distribution,
     resolve_interpret,
 )
 from .spmat import (  # noqa: F401
@@ -33,6 +35,10 @@ from .components import (  # noqa: F401
     degrees,
     expand_states,
     path_components,
+)
+from .components_dist import (  # noqa: F401
+    doubling_shard_map,
+    infer_row_axes,
 )
 from .spgemm import spgemm, spgemm_masked, transpose  # noqa: F401
 from .string_graph import (  # noqa: F401

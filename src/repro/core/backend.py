@@ -47,6 +47,22 @@ Current ops
     scatter-add oracle, ``pallas`` the column-banded VMEM accumulation
     kernel; integer counts make the parity exact
     (``tests/test_consensus.py``).
+``cc_labels``
+    ``(cols, *, max_iters) -> (labels, iters)`` — the hook/shortcut
+    connected-components rounds (DESIGN.md §2.9): ``reference`` runs one
+    XLA gather/scatter round trip per round, ``pallas`` fuses blocks of
+    rounds into VMEM-resident kernel calls (``kernels/cc/``); labels agree
+    bit-for-bit (``tests/test_components.py``).
+
+Distribution axis
+-----------------
+Orthogonal to the backend axis, the device contig path has a
+*distribution* axis (DESIGN.md §2.9): ``"gspmd"`` leaves partitioning to
+the auto-sharder, ``"shard_map"`` runs the doubling middle with explicit
+``ppermute``/``psum`` neighbor exchanges (``core/components_dist.py``).
+Both must produce bit-identical results — asserted in
+``tests/test_distributed.py``.  ``resolve_distribution`` validates the
+knob the same way ``resolve_backend`` does.
 """
 
 from __future__ import annotations
@@ -56,6 +72,8 @@ from typing import Callable, Dict, Tuple
 import jax
 
 BACKENDS = ("auto", "reference", "pallas")
+
+DISTRIBUTIONS = ("gspmd", "shard_map")
 
 _REGISTRY: Dict[Tuple[str, str], Callable] = {}
 
@@ -67,6 +85,19 @@ def resolve_backend(backend: str = "auto") -> str:
     if backend == "auto":
         return "pallas" if jax.default_backend() == "tpu" else "reference"
     return backend
+
+
+def resolve_distribution(distribution: str = "gspmd") -> str:
+    """Validate a ``PipelineConfig.distribution`` value (DESIGN.md §2.9).
+
+    Unlike the backend axis there is no ``"auto"``: GSPMD is always safe, so
+    the explicit-exchange path is strictly opt-in."""
+    if distribution not in DISTRIBUTIONS:
+        raise ValueError(
+            f"unknown distribution {distribution!r}; "
+            f"expected one of {DISTRIBUTIONS}"
+        )
+    return distribution
 
 
 def resolve_interpret(interpret: bool | str = "auto") -> bool:
@@ -89,6 +120,7 @@ def register_op(op: str, backend: str, fn: Callable) -> Callable:
 
 
 def available_backends(op: str) -> Tuple[str, ...]:
+    """Concrete backends registered for ``op`` (sorted; empty if unknown)."""
     _ensure_registered()
     return tuple(sorted(b for (o, b) in _REGISTRY if o == op))
 

@@ -9,7 +9,13 @@ in-chain order is a pointer-doubling (log-step) traversal.  This module holds
 those primitives; `assembly/contig_gen.py` composes them into the Contigs
 stage.
 
-Everything here is jit-compatible with static shapes:
+Everything here is jit-compatible with static shapes, with one documented
+exception: ``connected_components`` with the ``"pallas"`` backend (what
+``"auto"`` resolves to on TPU) host-sizes the transposed-adjacency capacity
+between its jitted pieces — the §2.6/§2.7 pow-2 staging idiom — so that
+code path must be *called from* host level, not traced under an outer
+``jax.jit`` (its ``"reference"`` backend remains a pure ``lax.while_loop``
+and traces fine).  The module's primitives below are all pure jax:
 
 * ``expand_states`` — re-encodes the n×n MinPlus 4-vector string matrix as the
   2n-vertex *state graph* (vertex ``2·read + strand``) in ELL form with scalar
@@ -51,6 +57,12 @@ def expand_states(s: EllMatrix) -> EllMatrix:
     graph: combo ``2a+b`` of edge ``i→j`` becomes the scalar-valued edge
     ``2i+a → 2j+b`` (value = suffix length, slot masked where +inf).
 
+    The 2n-state encoding is the array analogue of the host walk's
+    ``(read, strand)`` dict keys: state ``2r`` is read r forward, ``2r+1``
+    read r reverse-complement, and ``state ^ 1`` is the RC twin — which is
+    what makes RC-twin chain dedup a pure index transform downstream
+    (``assembly/contig_gen.py``).
+
     Rows are recompacted to the EllMatrix sorted-ascending invariant.  The
     output capacity is 2K: each of the K source slots contributes at most two
     targets (``b ∈ {0, 1}``) per source strand ``a``.
@@ -88,7 +100,7 @@ def degrees(adj: EllMatrix) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
 
 def connected_components(
-    adj: EllMatrix, *, max_iters: int | None = None
+    adj: EllMatrix, *, max_iters: int | None = None, backend: str = "auto"
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Minimum-label connected components of an ELL adjacency, treated as
     undirected (labels hook across ``u→v`` in both directions).
@@ -101,41 +113,23 @@ def connected_components(
     non-monotone labels — propagation needs Θ(n) rounds, so the default cap
     is ``n`` (correctness over speed; the convergence test exits early).
     For the disjoint-path graphs of the contig stage use
-    :func:`path_components`, which is O(log n) unconditionally.  Returns
-    ``(labels (n,) int32 — min vertex id per component, n_iterations)``.
+    :func:`path_components`, which is O(log n) unconditionally.
+
+    The hook/shortcut loop is dispatched as the op ``cc_labels``
+    (DESIGN.md §2.5/§2.9): ``"reference"`` runs one XLA round trip per
+    round, ``"pallas"`` fuses blocks of rounds into VMEM-resident kernel
+    calls (bit-identical labels; the iteration count then reports rounds
+    *executed*, a multiple of the fusion factor).  Note the ``"pallas"``
+    path host-sizes its transpose capacity (§2.6 staging), so call it from
+    host level rather than under an outer ``jax.jit`` — see the module
+    docstring.
+
+    Returns ``(labels (n,) int32 — min vertex id per component,
+    n_iterations)``.
     """
-    n = adj.cols.shape[0]
-    if max_iters is None:
-        max_iters = n
-    m = adj.mask
-    mf = m.reshape(-1)
-    # Masked slots are routed to index 0 with a ⊕-identity (_BIG) value, so
-    # both the gather and the scatter-min are no-ops there; this avoids
-    # concatenating a dummy slot, which GSPMD mis-partitions when the inputs
-    # arrive sharded (the contig path runs this on mesh-resident arrays).
-    safe = jnp.clip(jnp.where(m, adj.cols, 0), 0, n - 1)
-    sf = safe.reshape(-1)
+    from .backend import dispatch
 
-    def cond(carry):
-        _, changed, it = carry
-        return changed & (it < max_iters)
-
-    def body(carry):
-        l, _, it = carry
-        # hook: pull the min label over out-neighbours...
-        pulled = jnp.min(jnp.where(m, l[safe], _BIG), axis=1)
-        l1 = jnp.minimum(l, pulled)
-        # ...and push labels along edges (covers the reverse direction)
-        push = jnp.where(mf, jnp.broadcast_to(l1[:, None], m.shape).reshape(-1), _BIG)
-        l2 = l1.at[sf].min(push)
-        # shortcut: jump to the label's label
-        l3 = l2[l2]
-        return l3, jnp.any(l3 != l), it + 1
-
-    labels, _, iters = jax.lax.while_loop(
-        cond, body, (jnp.arange(n, dtype=jnp.int32), jnp.bool_(True), jnp.int32(0))
-    )
-    return labels, iters
+    return dispatch("cc_labels", backend)(adj.cols, max_iters=max_iters)
 
 
 def path_components(
@@ -183,15 +177,21 @@ def break_cycles(
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Cut every cycle of a functional graph at its minimum-id vertex.
 
-    ``succ``/``pred`` are (n,) int32 inverse partial functions (−1 = none), so
-    components are disjoint simple paths and cycles.  Pointer doubling with a
-    running path-minimum classifies each vertex: after ⌈log₂ n⌉+1 doublings a
-    vertex whose 2^k-step pointer never fell off the end lies on a cycle, and
-    its accumulated minimum is the cycle minimum.  The kept edge *entering*
-    each cycle minimum is deleted, turning every cycle into a path whose head
-    is the minimum — the same canonical head the host walk picks.
+    Input invariant: ``succ``/``pred`` are (n,) int32 *inverse partial
+    functions* (−1 = none) — ``succ[u] == v ⇔ pred[v] == u`` — as produced
+    by the branch cut (each vertex has ≤1 kept out-edge and ≤1 kept
+    in-edge), so components are disjoint simple paths and cycles.  Pointer
+    doubling with a running path-minimum classifies each vertex: after
+    ⌈log₂ n⌉+1 doublings a vertex whose 2^k-step pointer never fell off the
+    end lies on a cycle, and its accumulated minimum is the cycle minimum.
+    The kept edge *entering* each cycle minimum is deleted, turning every
+    cycle into a path whose head is the minimum — the same canonical head
+    the host walk picks.
 
-    Returns ``(succ', pred', n_cut)``.
+    Output invariant: ``(succ', pred')`` is again an inverse partial
+    function pair and is cycle-free — the precondition of
+    :func:`chain_rank` and :func:`path_components`.  Returns
+    ``(succ', pred', n_cut)``.
     """
     n = succ.shape[0]
     rounds = _log2_ceil(n) + 1
@@ -218,10 +218,15 @@ def chain_rank(pred: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray
     """Head and rank of every vertex of a disjoint union of simple paths,
     given predecessor pointers (−1 = chain head).
 
-    Classic pointer doubling: ``par ← par[par]`` while accumulating jumped
-    distance; converges in ⌈log₂ L⌉ rounds for the longest chain L (checked
-    with a ``while_loop`` so the returned iteration count reflects the actual
-    chain structure).  Returns ``(head, rank, n_iterations)``.
+    Input invariant: ``pred`` must be cycle-free (run :func:`break_cycles`
+    first) — on a residual cycle the parent jumps never reach a fixed point
+    and the loop would only stop at the iteration cap, with ranks
+    undefined.  Classic pointer doubling: ``par ← par[par]`` while
+    accumulating jumped distance; converges in ⌈log₂ L⌉ rounds for the
+    longest chain L (checked with a ``while_loop`` so the returned
+    iteration count reflects the actual chain structure).  Returns
+    ``(head, rank, n_iterations)`` with ``head[u]`` the chain head's vertex
+    id and ``rank[u]`` the distance from it (head rank = 0).
     """
     n = pred.shape[0]
     max_iters = _log2_ceil(n) + 1

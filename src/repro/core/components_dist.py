@@ -1,0 +1,263 @@
+"""shard_map pointer-doubling for the contig stages (DESIGN.md §2.9).
+
+The GSPMD device contig path (§2.7) leaves the partitioning of every
+doubling round to the auto-sharder, which re-materializes the full pointer
+arrays on every gather.  This module is the explicitly-distributed variant
+following the 2022 diBELLA contig paper's neighbor-communication model: the
+(2n,) state arrays are sharded ``P(row_axes)`` over the mesh's grid-row axes
+(the same ``("pod", "data")`` convention as ``runtime/sharding.py`` and
+SUMMA, §5), and each doubling round exchanges the pointer/minimum vectors
+with an explicit ``ppermute`` ring all-gather; convergence tests and cut
+counts reduce with ``psum``.
+
+One ``shard_map`` call covers the whole doubling middle of the contig stage
+— ``break_cycles`` → ``path_components`` → ``chain_rank`` — so the arrays
+never leave the mesh between phases.  Per-device exchange volume is exactly
+accountable: each ring all-gather moves ``n·(P−1)/P`` words, and a round
+costs 2 (break_cycles), 4 (path_components) or 2 (chain_rank) gathers —
+:func:`exchange_words` is the measured counterpart of the analytic model in
+``benchmarks/bench_comm_model.py`` (see docs/communication.md).
+
+All arithmetic is the same int32 doubling as ``core/components.py``, so the
+results — and the ``path_components`` iteration count — are bit-identical to
+the local/GSPMD path (asserted in ``tests/test_distributed.py``).
+"""
+
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Any, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..compat import shard_map
+from .components import _log2_ceil
+
+# ring all-gathers issued per doubling round, by phase (see module
+# docstring).  chain_rank reuses the convergence probe's gathered parent
+# vector as the next round's jump table, so it pays 2 gathers per round
+# (d + updated par) plus one initial parent gather.
+GATHERS_PER_ROUND = {"break_cycles": 2, "path_components": 4, "chain_rank": 2}
+
+
+def infer_row_axes(mesh) -> Tuple[str, ...]:
+    """Grid-row axes of ``mesh`` per the ``runtime/sharding.py`` convention:
+    the ``("pod", "data")`` axes that are present, else the first axis."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if axes else (mesh.axis_names[0],)
+
+
+def default_row_mesh():
+    """1D ``("data",)`` mesh over all visible devices — the fallback mesh for
+    ``distribution="shard_map"`` when the caller did not build one."""
+    devs = jax.devices()
+    kwargs = {}
+    try:  # jax ≥ 0.5 wants explicit axis types
+        from jax.sharding import AxisType  # type: ignore[attr-defined]
+
+        kwargs["axis_types"] = (AxisType.Auto,)
+    except ImportError:  # pragma: no cover - version-dependent
+        pass
+    return jax.make_mesh((len(devs),), ("data",), devices=devs, **kwargs)
+
+
+def _ring_all_gather(x: jnp.ndarray, axis_name: str, n_shards: int):
+    """ppermute ring all-gather: (n/P,) local shard → (n,) global vector.
+
+    ``P−1`` neighbor hops of ``n/P`` words each; device ``j`` receives shard
+    ``(j−s) mod P`` on hop ``s`` and re-rolls the stack into global id
+    order."""
+    if n_shards == 1:
+        return x
+    perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+    parts = [x]
+    cur = x
+    for _ in range(n_shards - 1):
+        cur = jax.lax.ppermute(cur, axis_name, perm)
+        parts.append(cur)
+    stacked = jnp.stack(parts)  # parts[s] holds shard (j − s) mod P
+    j = jax.lax.axis_index(axis_name)
+    idx = (j - jnp.arange(n_shards, dtype=jnp.int32)) % n_shards
+    return jnp.take(stacked, idx, axis=0).reshape((-1,) + x.shape[1:])
+
+
+@lru_cache(maxsize=None)
+def _make_doubling(mesh, row_axes: Tuple[str, ...], n_pad: int):
+    """Build (and cache per (mesh, axes, size)) the jitted shard_map callable
+    running the full doubling middle on ``(n_pad,)`` succ/pred shards."""
+    sizes = tuple(mesh.shape[a] for a in row_axes)
+    p = 1
+    for s in sizes:
+        p *= s
+    n_loc = n_pad // p
+    max_rounds = _log2_ceil(n_pad) + 1
+    spec = P(row_axes)
+    rspec = P()
+
+    def gather(x):
+        for ax in reversed(row_axes):
+            x = _ring_all_gather(x, ax, mesh.shape[ax])
+        return x
+
+    def psum_all(x):
+        return jax.lax.psum(x, row_axes)
+
+    def f(succ_l, pred_l):
+        idx = jnp.int32(0)
+        for a in row_axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        ids_l = idx * n_loc + jnp.arange(n_loc, dtype=jnp.int32)
+
+        # --- break_cycles: fixed doubling rounds, cut each cycle at its
+        # minimum (same element-wise math as components.break_cycles) ---
+        def bc_round(_, carry):
+            t_l, m_l = carry
+            t_g, m_g = gather(t_l), gather(m_l)
+            safe = jnp.where(t_l >= 0, t_l, 0)
+            m2 = jnp.where(t_l >= 0, jnp.minimum(m_l, m_g[safe]), m_l)
+            t2 = jnp.where(t_l >= 0, t_g[safe], -1)
+            return t2, m2
+
+        t, m = jax.lax.fori_loop(0, max_rounds, bc_round, (succ_l, ids_l))
+        on_cycle = t >= 0
+        cut = on_cycle & (succ_l == m)
+        n_cut = psum_all(jnp.sum(cut).astype(jnp.int32))
+        succ2 = jnp.where(cut, -1, succ_l)
+        pred2 = jnp.where(on_cycle & (ids_l == m), -1, pred_l)
+
+        # --- path_components: while-loop doubling with running minima in
+        # both directions; the psum'd continue flag replicates the local
+        # convergence test exactly (bit-identical iteration count) ---
+        def pc_cond(c):
+            return c[5] & (c[4] < max_rounds)
+
+        def pc_body(c):
+            tf, tb, mf, mb, it, _ = c
+            tf_g, mf_g = gather(tf), gather(mf)
+            tb_g, mb_g = gather(tb), gather(mb)
+            sf = jnp.where(tf >= 0, tf, 0)
+            mf2 = jnp.where(tf >= 0, jnp.minimum(mf, mf_g[sf]), mf)
+            tf2 = jnp.where(tf >= 0, tf_g[sf], -1)
+            sb = jnp.where(tb >= 0, tb, 0)
+            mb2 = jnp.where(tb >= 0, jnp.minimum(mb, mb_g[sb]), mb)
+            tb2 = jnp.where(tb >= 0, tb_g[sb], -1)
+            cont = psum_all(
+                (jnp.any(tf2 >= 0) | jnp.any(tb2 >= 0)).astype(jnp.int32)
+            ) > 0
+            return tf2, tb2, mf2, mb2, it + 1, cont
+
+        cont0 = psum_all(
+            (jnp.any(succ2 >= 0) | jnp.any(pred2 >= 0)).astype(jnp.int32)
+        ) > 0
+        tf, tb, mf, mb, pc_iters, _ = jax.lax.while_loop(
+            pc_cond, pc_body,
+            (succ2, pred2, ids_l, ids_l, jnp.int32(0), cont0),
+        )
+        labels = jnp.minimum(mf, mb)
+
+        # --- chain_rank: parent-jumping with distance accumulation.  The
+        # gathered parent vector is carried across rounds: the convergence
+        # probe's gather doubles as the next round's jump table ---
+        par0 = jnp.where(pred2 >= 0, pred2, ids_l)
+        d0 = (pred2 >= 0).astype(jnp.int32)
+        par0_g = gather(par0)
+        cont0r = psum_all(jnp.any(par0_g[par0] != par0).astype(jnp.int32)) > 0
+
+        def cr_cond(c):
+            return c[4] & (c[3] < max_rounds)
+
+        def cr_body(c):
+            par, d, par_g, it, _ = c
+            d_g = gather(d)
+            par2 = par_g[par]
+            d2 = d + d_g[par]
+            par2_g = gather(par2)
+            cont = psum_all(
+                jnp.any(par2_g[par2] != par2).astype(jnp.int32)
+            ) > 0
+            return par2, d2, par2_g, it + 1, cont
+
+        head, rank, _, cr_iters, _ = jax.lax.while_loop(
+            cr_cond, cr_body, (par0, d0, par0_g, jnp.int32(0), cont0r)
+        )
+
+        return succ2, pred2, labels, head, rank, n_cut, pc_iters, cr_iters
+
+    return jax.jit(
+        shard_map(
+            f, mesh=mesh, in_specs=(spec, spec),
+            out_specs=(spec, spec, spec, spec, spec, rspec, rspec, rspec),
+        )
+    )
+
+
+def exchange_words(n_pad: int, p: int, bc_rounds: int, pc_iters: int,
+                   cr_iters: int) -> int:
+    """Per-device words exchanged by one doubling middle: each ring
+    all-gather ships ``n·(P−1)/P`` words, break_cycles/path_components/
+    chain_rank issue 2/4/2 gathers per round (+1 for chain_rank's initial
+    parent gather, which seeds both the convergence probe and round 1's
+    jump table)."""
+    per_gather = n_pad * (p - 1) // p
+    gathers = (
+        GATHERS_PER_ROUND["break_cycles"] * bc_rounds
+        + GATHERS_PER_ROUND["path_components"] * pc_iters
+        + GATHERS_PER_ROUND["chain_rank"] * cr_iters
+        + 1
+    )
+    return gathers * per_gather
+
+
+def doubling_shard_map(
+    succ: jnp.ndarray,
+    pred: jnp.ndarray,
+    *,
+    mesh,
+    row_axes: Sequence[str] | None = None,
+) -> Dict[str, Any]:
+    """Distributed doubling middle of the contig stage: ``break_cycles`` →
+    ``path_components`` → ``chain_rank`` under one ``shard_map``.
+
+    Args:
+      succ / pred: ``(n,)`` int32 functional successor/predecessor pointers
+        (``−1`` = none), the branch-cut output of the state graph.
+      mesh: the device mesh; arrays are sharded ``P(row_axes)`` over it.
+      row_axes: grid-row axes (default: :func:`infer_row_axes`).
+
+    Returns a dict with the same arrays the local doubling produces —
+    ``succ``, ``pred`` (cycle-cut), ``labels``, ``head``, ``rank`` — plus
+    ``n_cut``, ``cc_iterations`` (bit-identical to the local
+    ``path_components`` count), ``cr_iterations``, ``bc_rounds`` and the
+    per-device ``exchange_words`` of the whole middle.
+    """
+    if row_axes is None:
+        row_axes = infer_row_axes(mesh)
+    row_axes = tuple(row_axes)
+    n = succ.shape[0]
+    p = 1
+    for a in row_axes:
+        p *= mesh.shape[a]
+    n_pad = -(-n // p) * p
+    if n_pad != n:
+        fill = jnp.full(n_pad - n, -1, jnp.int32)
+        succ = jnp.concatenate([succ, fill])
+        pred = jnp.concatenate([pred, fill])
+    fn = _make_doubling(mesh, row_axes, n_pad)
+    s2, p2, labels, head, rank, n_cut, pc_iters, cr_iters = fn(succ, pred)
+    bc_rounds = _log2_ceil(n_pad) + 1
+    return {
+        "succ": s2[:n],
+        "pred": p2[:n],
+        "labels": labels[:n],
+        "head": head[:n],
+        "rank": rank[:n],
+        "n_cut": n_cut,
+        "cc_iterations": pc_iters,
+        "cr_iterations": cr_iters,
+        "bc_rounds": bc_rounds,
+        "exchange_words": exchange_words(
+            n_pad, p, bc_rounds, int(pc_iters), int(cr_iters)
+        ),
+    }

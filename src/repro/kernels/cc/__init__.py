@@ -1,0 +1,15 @@
+"""Fused connected-components (hook/shortcut) kernel package.
+
+``ops.py`` registers both backends of the ``cc_labels`` op with the dispatch
+layer (DESIGN.md §2.5/§2.9): ``ref.py`` is the one-round-per-HBM-round-trip
+jnp oracle, ``cc.py`` the Pallas kernel that fuses ``rounds_per_call``
+hook/shortcut rounds into a single VMEM-resident call.
+"""
+
+from .ops import (  # noqa: F401
+    cc_labels_pallas,
+    fused_path_fits,
+    hbm_round_trips,
+    transpose_ell,
+)
+from .ref import cc_labels_ref  # noqa: F401

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: fused hook/shortcut connected-components rounds.
+
+Hardware adaptation (DESIGN.md §2.9): the jnp oracle issues one XLA
+gather/scatter pair — a full HBM round trip for the label vector and the ELL
+neighbour blocks — per hook/shortcut round.  This kernel keeps the labels
+*and* both neighbour blocks VMEM-resident across ``rounds`` consecutive
+rounds: one ``pallas_call`` loads ``cols`` (out-neighbours), ``colsT``
+(in-neighbours, the ELL transpose built once by ``ops.py``) and the label
+row, then runs a ``fori_loop`` of fused rounds entirely in VMEM before
+writing the labels (plus a changed flag) back once.
+
+The scatter-min of the oracle's push step is re-expressed as a gather-min
+over the *transposed* adjacency — ``min`` over the identical edge set, so the
+kernel is bit-for-bit identical to ``ref.py`` (the parity contract of the
+``cc_labels`` op).  All gathers use the ``take_along_axis``-on-a-``(1, N)``
+row idiom shared with the pileup kernel (§2.8).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...core.backend import resolve_interpret
+
+_BIG = 2**30  # plain python int: Pallas kernels cannot capture traced consts
+
+
+def _cc_rounds_kernel(
+    oc_ref, ic_ref, lab_ref, out_ref, chg_ref, *, n: int, k_out: int,
+    k_in: int, rounds: int,
+):
+    oc = oc_ref[...]  # (1, n·k_out) int32, -1 = empty
+    ic = ic_ref[...]  # (1, n·k_in)  int32, -1 = empty
+    oc_safe = jnp.clip(oc, 0, n - 1)
+    ic_safe = jnp.clip(ic, 0, n - 1)
+    om = oc >= 0
+    im = ic >= 0
+
+    def gather_min(l, idx_safe, mask, kk):
+        # l (1, n); idx (1, n·kk) → per-row min over the kk neighbour slots
+        g = jnp.take_along_axis(l, idx_safe, axis=1)
+        g = jnp.where(mask, g, _BIG).reshape(n, kk)
+        return jnp.min(g, axis=1).reshape(1, n)
+
+    def rd(_, carry):
+        l, chg = carry
+        # hook: pull the min label over out-neighbours...
+        l1 = jnp.minimum(l, gather_min(l, oc_safe, om, k_out))
+        # ...then over in-neighbours (== the oracle's scatter-min push)
+        l2 = jnp.minimum(l1, gather_min(l1, ic_safe, im, k_in))
+        # shortcut: jump to the label's label
+        l3 = jnp.take_along_axis(l2, l2, axis=1)
+        return l3, chg | jnp.any(l3 != l)
+
+    l0 = lab_ref[...]
+    l, chg = jax.lax.fori_loop(0, rounds, rd, (l0, jnp.bool_(False)))
+    out_ref[...] = l
+    chg_ref[...] = chg.astype(jnp.int32).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("rounds", "interpret"))
+def cc_rounds_pallas(
+    oc_flat: jnp.ndarray,
+    ic_flat: jnp.ndarray,
+    labels: jnp.ndarray,
+    *,
+    rounds: int,
+    interpret: bool | str = "auto",
+):
+    """Run ``rounds`` fused hook/shortcut rounds in one VMEM-resident call.
+
+    Args:
+      oc_flat: ``(1, n·k_out)`` int32 flattened out-neighbour ELL columns.
+      ic_flat: ``(1, n·k_in)`` int32 flattened in-neighbour ELL columns
+        (the transpose of ``oc_flat``; see ``ops.transpose_ell``).
+      labels: ``(1, n)`` int32 current labels.
+      rounds: fused rounds per call (static).
+
+    Returns:
+      ``(labels', changed)`` with ``labels'`` ``(1, n)`` int32 and ``changed``
+      ``(1, 1)`` int32 — nonzero iff any round changed any label.
+    """
+    interpret = resolve_interpret(interpret)
+    n = labels.shape[1]
+    k_out = oc_flat.shape[1] // n
+    k_in = ic_flat.shape[1] // n
+    kernel = functools.partial(
+        _cc_rounds_kernel, n=n, k_out=k_out, k_in=k_in, rounds=rounds
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, n * k_out), lambda i: (0, 0)),
+            pl.BlockSpec((1, n * k_in), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(oc_flat, ic_flat, labels)

@@ -1,0 +1,78 @@
+"""Pure-jnp oracle for the hook/shortcut connected-components rounds.
+
+One round = hook (gather-min over out-neighbours, then scatter-min along
+edges, i.e. a min over in-neighbours) + one pointer-jump shortcut
+(``l ← l[l]``), iterated to a fixed point under a ``lax.while_loop``.  This
+is the Shiloach–Vishkin-style min-label propagation previously inlined in
+``core/components.connected_components``; it now lives here as the
+``"reference"`` backend of the ``cc_labels`` op (DESIGN.md §2.5/§2.9) so the
+fused Pallas kernel in ``cc.py`` has a bit-for-bit oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_BIG = jnp.int32(2**30)
+
+
+def cc_labels_ref(
+    cols: jnp.ndarray,
+    *,
+    max_iters: int | None = None,
+    rounds_per_call: int | None = None,
+    interpret: bool | str = "auto",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Min-label connected components of an ELL adjacency, one XLA round trip
+    per hook/shortcut round.
+
+    Args:
+      cols: ``(n, K)`` int32 ELL column indices (``-1`` = empty slot); the
+        adjacency is treated as undirected (labels hook across ``u→v`` in
+        both directions) and is assumed square (labels span ``n`` rows).
+      max_iters: round cap; defaults to ``n`` (correctness over speed on
+        adversarial orderings — the convergence test exits early).
+      rounds_per_call / interpret: kernel-side tuning knobs of the Pallas
+        backend, accepted and ignored here (shared op signature).
+
+    Returns:
+      ``(labels, n_iterations)`` — ``labels`` is ``(n,)`` int32, the minimum
+      vertex id of each component; ``n_iterations`` the exact number of
+      hook/shortcut rounds executed before the labels stopped changing.
+    """
+    del rounds_per_call, interpret
+    n = cols.shape[0]
+    if max_iters is None:
+        max_iters = n
+    m = cols >= 0
+    mf = m.reshape(-1)
+    # Masked slots are routed to index 0 with a ⊕-identity (_BIG) value, so
+    # both the gather and the scatter-min are no-ops there; this avoids
+    # concatenating a dummy slot, which GSPMD mis-partitions when the inputs
+    # arrive sharded (the contig path runs this on mesh-resident arrays).
+    safe = jnp.clip(jnp.where(m, cols, 0), 0, n - 1)
+    sf = safe.reshape(-1)
+
+    def cond(carry):
+        _, changed, it = carry
+        return changed & (it < max_iters)
+
+    def body(carry):
+        l, _, it = carry
+        # hook: pull the min label over out-neighbours...
+        pulled = jnp.min(jnp.where(m, l[safe], _BIG), axis=1)
+        l1 = jnp.minimum(l, pulled)
+        # ...and push labels along edges (covers the reverse direction)
+        push = jnp.where(mf, jnp.broadcast_to(l1[:, None], m.shape).reshape(-1), _BIG)
+        l2 = l1.at[sf].min(push)
+        # shortcut: jump to the label's label
+        l3 = l2[l2]
+        return l3, jnp.any(l3 != l), it + 1
+
+    labels, _, iters = jax.lax.while_loop(
+        cond, body, (jnp.arange(n, dtype=jnp.int32), jnp.bool_(True), jnp.int32(0))
+    )
+    return labels, iters

@@ -1,8 +1,11 @@
 """Unit tests for core/components.py: state-graph expansion, pointer-doubling
-connected components, cycle breaking, and chain ranking."""
+connected components, cycle breaking, and chain ranking — plus golden parity
+of the fused cc kernel (kernels/cc/, DESIGN.md §2.9) against the jnp
+oracle."""
 
 import numpy as np
 import jax.numpy as jnp
+import pytest
 
 from repro.assembly.contig_gen import string_matrix_from_edges
 from repro.core.components import (
@@ -14,6 +17,7 @@ from repro.core.components import (
     path_components,
 )
 from repro.core.spmat import EllMatrix
+from repro.kernels.cc import hbm_round_trips, transpose_ell
 
 
 def _adj(n, pairs, capacity=4):
@@ -131,3 +135,73 @@ def test_break_cycles_self_loop():
     s2, p2, n_cut = break_cycles(succ, pred)
     assert int(n_cut) == 1
     assert s2.tolist() == [-1, -1] and p2.tolist() == [-1, -1]
+
+
+# ---------------------------------------------------------------------------
+# Fused cc kernel: golden parity vs the jnp oracle (DESIGN.md §2.9).
+# ---------------------------------------------------------------------------
+
+
+def _permuted_chain_adj(n, seed, capacity=2):
+    """A single path whose vertex ids are randomly permuted along it — the
+    adversarial Θ(n)-round case for min-label propagation."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    return _adj(
+        n, [(int(perm[i]), int(perm[i + 1])) for i in range(n - 1)],
+        capacity=capacity,
+    )
+
+
+def _cycle_heavy_adj(n, cycle, seed, capacity=4):
+    """n/cycle disjoint directed cycles with shuffled vertex order."""
+    rng = np.random.default_rng(seed)
+    pairs = []
+    for c0 in range(0, n, cycle):
+        cyc = [c0 + t for t in range(cycle)]
+        rng.shuffle(cyc)
+        pairs += [(cyc[t], cyc[(t + 1) % cycle]) for t in range(cycle)]
+    return _adj(n, pairs, capacity=capacity)
+
+
+@pytest.mark.parametrize("make_adj", [
+    lambda: _permuted_chain_adj(257, seed=2),
+    lambda: _cycle_heavy_adj(320, cycle=10, seed=3),
+    lambda: _cycle_heavy_adj(96, cycle=3, seed=4),
+])
+def test_cc_kernel_golden_parity(make_adj):
+    """Fused kernel labels must equal the oracle's bit-for-bit.  HBM
+    round-trip accounting: the oracle pays one trip per round, the fused
+    path one per chunk of 8 rounds (+1 confirming chunk), so it never pays
+    more than the oracle's ceil-to-chunks and wins strictly whenever
+    convergence is slower than one chunk."""
+    adj = make_adj()
+    lr, ir = connected_components(adj, backend="reference")
+    lp, ip = connected_components(adj, backend="pallas")
+    assert np.array_equal(np.asarray(lr), np.asarray(lp))
+    # oracle: one HBM round trip per round; fused: one per chunk of 8
+    trips = hbm_round_trips(int(ip))
+    assert trips <= hbm_round_trips(int(ir)) + 1
+    if int(ir) > 8:
+        assert trips < int(ir)
+
+
+def test_cc_kernel_parity_on_random_graphs():
+    rng = np.random.default_rng(7)
+    for trial in range(3):
+        n = int(rng.integers(40, 200))
+        e = int(rng.integers(n // 2, 2 * n))
+        pairs = {(int(rng.integers(n)), int(rng.integers(n)))
+                 for _ in range(e)}
+        cap = max(sum(1 for u, _ in pairs if u == r) for r in range(n))
+        adj = _adj(n, sorted(pairs), capacity=max(cap, 1))
+        lr, _ = connected_components(adj, backend="reference")
+        lp, _ = connected_components(adj, backend="pallas")
+        assert np.array_equal(np.asarray(lr), np.asarray(lp)), trial
+
+
+def test_transpose_ell_lists_in_neighbours():
+    adj = _adj(5, [(0, 2), (1, 2), (3, 2), (4, 0)], capacity=2)
+    t = np.asarray(transpose_ell(adj.cols))
+    ins = {r: sorted(int(c) for c in t[r] if c >= 0) for r in range(5)}
+    assert ins == {0: [4], 1: [], 2: [0, 1, 3], 3: [], 4: []}

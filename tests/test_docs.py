@@ -1,0 +1,39 @@
+"""Docs-surface checks in tier-1: markdown links resolve and the public-API
+docstring lint passes (the same scripts the CI docs job runs, so a broken
+README link or an undocumented public function fails locally first)."""
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(script):
+    r = subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", script)],
+        capture_output=True, text=True, timeout=120,
+    )
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def test_docs_links_resolve():
+    out = _run("check_docs_links.py")
+    assert "links ok" in out
+
+
+def test_public_api_docstrings():
+    out = _run("lint_docstrings.py")
+    assert "docstring lint clean" in out
+
+
+def test_readme_exists_with_required_sections():
+    with open(os.path.join(REPO, "README.md")) as f:
+        readme = f.read()
+    # the satellite contract: quickstart, tier-1 command, the matrix, DESIGN
+    assert "pytest -x -q" in readme
+    assert "examples/quickstart.py" in readme
+    assert "distribution" in readme and "backend" in readme
+    assert "DESIGN.md" in readme
+    assert os.path.exists(os.path.join(REPO, "docs", "communication.md"))
