@@ -42,6 +42,17 @@ def run(backends=("reference", "pallas"), distributions=("gspmd",)):
              f"frac={v / total:.3f};live_pairs={live}/{cand}")
             for k, v in res.timings.items()
         )
+        rows.append(
+            (f"breakdown[{backend}]/tr_stats",
+             res.timings["TrReduction"] * 1e6,
+             # tr_backend is the kernel path that actually ran — the fused
+             # TR downgrades pallas→reference above TR_DENSE_MAX_ROWS, and
+             # this row is where that must stay visible
+             f"iters={res.stats['tr_iterations']};"
+             f"tr_backend={res.stats['tr_backend']};"
+             f"n_overflow={res.stats['tr_overflow']};"
+             f"nnz_S={res.stats['nnz_S']}")
+        )
         cs = res.stats["contigs"]
         rows.append(
             (f"breakdown[{backend}]/contig_stats",
@@ -66,7 +77,9 @@ def run(backends=("reference", "pallas"), distributions=("gspmd",)):
         # measured per-device exchange volume vs the analytic model
         import jax
 
-        from .bench_comm_model import words_contig_doubling
+        from .bench_comm_model import (
+            words_chain_sort, words_contig_doubling, words_graph_cut,
+        )
 
         cfg = PipelineConfig(m_capacity=1 << 16, upper=48, read_capacity=128,
                              overlap_capacity=48, r_capacity=32, band=33,
@@ -77,14 +90,19 @@ def run(backends=("reference", "pallas"), distributions=("gspmd",)):
         n_states = 2 * res.stats["n_reads"]
         measured = res.stats["exchange_words"]
         rounds = res.stats["exchange_rounds"]
-        model = words_contig_doubling(n_states, p, rounds)
+        dbl_rounds = res.stats["exchange_rounds_doubling"]
+        model = words_contig_doubling(n_states, p, dbl_rounds)
         per_round = measured // max(rounds, 1)
         rows.append(
             (f"breakdown[pallas/shard_map]/contig_comm",
              res.timings["Contigs"] * 1e6,
              f"P={p};rounds={rounds};exchange_words={measured};"
              f"words_per_round={per_round};model_words={model};"
-             f"model_words_logn={words_contig_doubling(n_states, p)}")
+             f"model_words_logn={words_contig_doubling(n_states, p)};"
+             f"exchange_words_cut={res.stats['exchange_words_cut']};"
+             f"model_words_cut={words_graph_cut(n_states, p)};"
+             f"exchange_words_sort={res.stats['exchange_words_sort']};"
+             f"model_words_sort={words_chain_sort(n_states, p)}")
         )
     return rows
 

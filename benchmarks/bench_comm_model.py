@@ -1,5 +1,5 @@
 """Table I reproduction: 1D vs 2D communication cost models, plus the
-contig-stage doubling model (DESIGN.md §2.9, docs/communication.md).
+contig-stage exchange models (DESIGN.md §2.9/§2.10, docs/communication.md).
 
 Evaluates the paper's §V formulas with the measured dataset constants
 (Table III/IV) across P = 64..16384 and locates the crossover where the 2D
@@ -12,8 +12,19 @@ all-gathers 2n-state vectors at ``n·(P−1)/P`` words per vector, with
 ``rounds ≈ 3·(⌈log₂ 2n⌉+1)`` (one log term per phase: break_cycles,
 path_components, chain_rank) and ≈3 gathers per round (the 2/4/2 per-phase
 counts of ``components_dist.GATHERS_PER_ROUND``, mean 8/3, rounded up).
-bench_contigs and bench_breakdown print the *measured* ``exchange_words``
-stat next to this model so the two stay cross-checked.
+
+``words_graph_cut`` and ``words_chain_sort`` model the two sub-stages PR 5
+moved into the same shard_map region: the branch cut's single psum round (3
+full-vector ring allreduces) and the ring-bitonic chain ordering (one
+eligibility all-gather + ``log₂P·(log₂P+1)/2`` merge-split hops of the
+3-word (labkey, rank, idx) sort triple).  Both are *data-independent* —
+fixed by (n, P) alone — so the measured ``exchange_words_cut`` /
+``exchange_words_sort`` stats must match these formulas exactly; the
+formulas are deliberately re-derived here (not imported from
+``components_dist``) so the benchmark cross-check is an independent model,
+not an identity.  bench_contigs and bench_breakdown print the *measured*
+stats next to these models, and the CI smoke artifact asserts the sort-term
+agreement (``scripts/check_smoke_comm.py``).
 """
 
 from __future__ import annotations
@@ -57,6 +68,42 @@ def words_contig_doubling(n_states, p, rounds=None):
     return 3 * rounds * (n_states * (p - 1) // max(p, 1))
 
 
+def _states_per_device(n_states, p):
+    """Padded local state count: reads are padded to a multiple of P before
+    sharding (core/components_dist.contig_stage_shard_map), so every device
+    holds an even number of states — 2·⌈(n/2)/P⌉."""
+    return 2 * (-(-(n_states // 2) // p))
+
+
+def words_graph_cut(n_states, p):
+    """Per-device words of the distributed branch cut's single psum round:
+    3 full-vector ring allreduces (in-degree tally, pred scatter, in-suffix
+    scatter), each a reduce-scatter + all-gather of ``n·(P−1)/P`` words."""
+    if p <= 1:
+        return 0
+    return 3 * 2 * (_states_per_device(n_states, p) * (p - 1))
+
+
+def words_chain_sort(n_states, p):
+    """Per-device words of the ring-bitonic distributed chain ordering
+    (DESIGN.md §2.10): one out-degree ring all-gather (``n·(P−1)/P`` words,
+    chain-head eligibility) plus one merge-split hop per comparator stage of
+    the sort network — ``log₂P·(log₂P+1)/2`` stages for power-of-two P
+    (bitonic), ``P`` stages otherwise (odd-even transposition) — each
+    shipping the local 3-word (labkey, rank, idx) block, ``3·n/P`` words.
+    Data-independent: the network is fixed by P, so the measured
+    ``exchange_words_sort`` stat must equal this exactly."""
+    if p <= 1:
+        return 0
+    if p & (p - 1) == 0:
+        lg = int(math.log2(p))
+        stages = lg * (lg + 1) // 2
+    else:
+        stages = p
+    n_loc = _states_per_device(n_states, p)
+    return n_loc * (p - 1) + 3 * n_loc * stages
+
+
 def run():
     rows = []
     for name, ds in DATASETS.items():
@@ -64,6 +111,11 @@ def run():
             w = words_contig_doubling(2 * ds["n"], p)
             rows.append((f"comm_model/{name}/contig_doubling/P{p}", 0.0,
                          f"Wdoubling={w:.3e};scaling=(P-1)/P·log2n"))
+            wc = words_graph_cut(2 * ds["n"], p)
+            ws = words_chain_sort(2 * ds["n"], p)
+            rows.append((f"comm_model/{name}/chain_sort/P{p}", 0.0,
+                         f"Wcut={wc:.3e};Wsort={ws:.3e};"
+                         f"scaling=(P-1)/P+3·log2P·(log2P+1)/2/P"))
         crossover = None
         for p in (64, 128, 256, 512, 1024, 2048, 4096, 8192, 16384):
             w1, w2 = words_1d(ds, p), words_2d(ds, p)

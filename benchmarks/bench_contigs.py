@@ -7,9 +7,13 @@ so the sweep isolates contig generation from the rest of the pipeline.
 
 Rows:
   * ``contigs[backend/distribution]/nN`` — the device path under
-    ``distribution="gspmd"`` (auto-sharded) vs ``"shard_map"`` (explicit
-    ppermute/psum doubling); shard_map rows report the per-device exchange
-    volume next to the model prediction from ``bench_comm_model``.
+    ``distribution="gspmd"`` (auto-sharded) vs ``"shard_map"`` (the full
+    explicit-exchange chain stage: branch cut + doubling + ring-bitonic
+    ordering, DESIGN.md §2.10); shard_map rows report the per-device
+    exchange volume — total, doubling and sort terms — next to the model
+    predictions from ``bench_comm_model`` (``words_contig_doubling`` /
+    ``words_chain_sort``; the sort pair must match exactly, and the CI
+    smoke artifact asserts it via ``scripts/check_smoke_comm.py``).
   * ``cc[backend]/nN`` — the hook/shortcut component rounds through the
     ``cc_labels`` op: jnp oracle (one HBM round trip per round) vs fused
     Pallas kernel (one per 8-round chunk); derived column reports both trip
@@ -67,7 +71,7 @@ def run(backends=("reference", "pallas"), sweep=(256, 1024, 4096),
     from repro.core.components_dist import default_row_mesh
     from repro.kernels.cc import fused_path_fits, hbm_round_trips
 
-    from .bench_comm_model import words_contig_doubling
+    from .bench_comm_model import words_chain_sort, words_contig_doubling
 
     mesh = default_row_mesh() if "shard_map" in distributions else None
     rows = []
@@ -95,11 +99,17 @@ def run(backends=("reference", "pallas"), sweep=(256, 1024, 4096),
                 if dist == "shard_map":
                     p = len(np.ravel(mesh.devices))
                     model = words_contig_doubling(
-                        2 * n, p, cset.stats["exchange_rounds"]
+                        2 * n, p, cset.stats["exchange_rounds_doubling"]
                     )
+                    model_sort = words_chain_sort(2 * n, p)
                     derived += (
                         f";exchange_words={cset.stats['exchange_words']}"
+                        f";exchange_words_doubling="
+                        f"{cset.stats['exchange_words_doubling']}"
                         f";model_words={model}"
+                        f";exchange_words_sort="
+                        f"{cset.stats['exchange_words_sort']}"
+                        f";model_words_sort={model_sort}"
                     )
                 tag = backend if dist == "gspmd" else f"{backend}/{dist}"
                 rows.append((f"contigs[{tag}]/n{n}", us, derived))

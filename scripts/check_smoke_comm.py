@@ -1,0 +1,84 @@
+#!/usr/bin/env python
+"""Assert the comm-model cross-check on a benchmark smoke artifact.
+
+Reads the JSON records emitted by ``benchmarks/run.py --json`` and checks
+every ``contigs[*/shard_map]`` row: the *measured* sort-phase exchange
+volume (``exchange_words_sort``, accounted per ``ppermute`` issued by
+``core/components_dist.contig_stage_shard_map``) must agree with the
+analytic model (``model_words_sort`` = ``bench_comm_model.words_chain_sort``)
+to within 10%.  The sort network is data-independent, so in practice the two
+are equal — the tolerance only absorbs future schedule tweaks.
+
+Exits 1 when a row disagrees or when no shard_map contig row is present at
+all (a silently dropped distribution axis must fail CI, not pass it).  Run
+from the repo root::
+
+    python scripts/check_smoke_comm.py BENCH_smoke.json
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+TOL = 0.10
+
+
+def _field(derived: str, key: str) -> int | None:
+    m = re.search(rf"(?:^|;){re.escape(key)}=(-?\d+)", derived)
+    return int(m.group(1)) if m else None
+
+
+def check(records) -> list:
+    """Return ``(name, message)`` failures for the shard_map contig rows of
+    one smoke-artifact record list; empty means the cross-check holds."""
+    failures = []
+    rows = [r for r in records
+            if r.get("op") == "contigs"
+            and "shard_map" in (r.get("backend") or "")]
+    if not rows:
+        return [("<artifact>",
+                 "no contigs[*/shard_map] rows found — the distribution "
+                 "axis was dropped from the smoke run")]
+    for r in rows:
+        measured = _field(r["derived"], "exchange_words_sort")
+        model = _field(r["derived"], "model_words_sort")
+        if measured is None or model is None:
+            failures.append((r["name"],
+                             f"missing sort-term fields in {r['derived']!r}"))
+            continue
+        if measured == model == 0:
+            continue  # P == 1: ring degenerates, both sides are exactly 0
+        if abs(measured - model) > TOL * max(abs(model), 1):
+            failures.append(
+                (r["name"],
+                 f"measured exchange_words_sort={measured} deviates from "
+                 f"model_words_sort={model} by more than {TOL:.0%}")
+            )
+    return failures
+
+
+def main(argv) -> int:
+    """Check each artifact path in ``argv``; 0 = all cross-checks hold."""
+    if not argv:
+        print("usage: check_smoke_comm.py BENCH.json [...]", file=sys.stderr)
+        return 2
+    failed = 0
+    for path in argv:
+        with open(path) as f:
+            records = json.load(f)
+        failures = check(records)
+        for name, msg in failures:
+            print(f"{path}: {name}: {msg}")
+            failed += 1
+        if not failures:
+            n = sum(1 for r in records if r.get("op") == "contigs"
+                    and "shard_map" in (r.get("backend") or ""))
+            print(f"{path}: comm-model cross-check ok "
+                  f"({n} shard_map contig row(s))")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -28,15 +28,20 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 
-# the modules whose public APIs carry the documented contracts
+# the modules whose public APIs carry the documented contracts (PR 5 widened
+# the scope to the TR module — its TRStats.backend accounting is contractual
+# — and the smoke-artifact checker scripts)
 DEFAULT_TARGETS = [
     "src/repro/core/components.py",
     "src/repro/core/components_dist.py",
     "src/repro/core/backend.py",
+    "src/repro/core/transitive_reduction.py",
     "src/repro/assembly/contig_gen.py",
     "src/repro/kernels/cc/ref.py",
     "src/repro/kernels/cc/cc.py",
     "src/repro/kernels/cc/ops.py",
+    "scripts/check_smoke_comm.py",
+    "scripts/lint_docstrings.py",
 ]
 
 

@@ -86,8 +86,11 @@ class ContigSet:
     offsets: Any  # (C, M) int32, piece destination column
     widths: Any  # (C, M) int32, bases the piece appended
     n_contigs: int
-    # n_branch_cut, cc_iterations, distribution ("gspmd"|"shard_map"|"host"),
-    # and on the shard_map path exchange_words/exchange_rounds (§2.9)
+    # n_branch_cut, cc_iterations, distribution ("gspmd"|"shard_map"|"host")
+    # and the exchange accounting (§2.9/§2.10): exchange_words/-_rounds plus
+    # the per-phase split (exchange_words_cut/_doubling/_sort,
+    # exchange_rounds_doubling/_sort) — present on every path, zero where no
+    # explicit exchange runs (gspmd auto-sharding, host walk)
     stats: Dict[str, Any]
 
     def to_contigs(self) -> List[Contig]:
@@ -253,39 +256,53 @@ def _order_chains(cut, dbl):
     }
 
 
+# exchange accounting is part of the ContigSet.stats contract on *every*
+# path: present-and-zero where no explicit exchange runs (gspmd / host), so
+# `bench_contigs --distribution` rows stay comparable without key-existence
+# checks (the shard_map path overwrites these with measured values)
+ZERO_EXCHANGE_STATS = {
+    "exchange_words": 0,
+    "exchange_rounds": 0,
+    "exchange_words_cut": 0,
+    "exchange_words_doubling": 0,
+    "exchange_words_sort": 0,
+    "exchange_rounds_doubling": 0,
+    "exchange_rounds_sort": 0,
+}
+
+
 def _chain_state(
     s: EllMatrix, *, distribution: str = "gspmd", mesh=None, row_axes=None
 ):
     """Stage 1 driver: graph cut → doubling middle → chain ordering.
 
-    ``distribution`` selects the doubling middle (DESIGN.md §2.9):
-    ``"gspmd"`` keeps the auto-sharded local path; ``"shard_map"`` runs the
-    explicit ``ppermute``/``psum`` exchange path of
-    ``core/components_dist.py`` over ``mesh`` (built on demand when absent).
+    ``distribution`` selects the whole chain stage (DESIGN.md §2.9/§2.10):
+    ``"gspmd"`` runs the auto-sharded local path (`_graph_cut` →
+    `_doubling_local` → `_order_chains`); ``"shard_map"`` runs all three
+    sub-stages — distributed branch cut, explicit ``ppermute``/``psum``
+    doubling, ring-bitonic chain ordering — under the single ``shard_map``
+    region of ``core/components_dist.contig_stage_shard_map`` over ``mesh``
+    (built on demand when absent), so the arrays never leave the mesh
+    between sub-stages.
 
     Returns ``(st, dist_stats)``: ``st`` is the pytree the jitted layout/
     gather stages consume (kept free of host scalars so their traces are
-    shared across calls); ``dist_stats`` holds the shard_map path's exchange
-    accounting (empty for gspmd)."""
-    cut = _graph_cut(s)
+    shared across calls); ``dist_stats`` holds the exchange accounting —
+    measured per-phase words/rounds on the shard_map path, present-and-zero
+    otherwise."""
     if distribution == "shard_map":
-        from ..core.components_dist import default_row_mesh, doubling_shard_map
+        from ..core.components_dist import (
+            contig_stage_shard_map,
+            default_row_mesh,
+        )
 
         if mesh is None:
             mesh = default_row_mesh()
-        d = doubling_shard_map(
-            cut["succ0"], cut["pred0"], mesh=mesh, row_axes=row_axes
-        )
-        dbl = {k: d[k] for k in ("labels", "head", "rank")}
-        dbl["cc_iterations"] = d["cc_iterations"]
-        dist_stats = {
-            "exchange_words": int(d["exchange_words"]),
-            "exchange_rounds": int(d["cc_iterations"])
-            + int(d["cr_iterations"])
-            + d["bc_rounds"],
-        }
-        return _order_chains(cut, dbl), dist_stats
-    return _order_chains(cut, _doubling_local(cut["succ0"], cut["pred0"])), {}
+        st, xstats = contig_stage_shard_map(s, mesh=mesh, row_axes=row_axes)
+        return st, {**ZERO_EXCHANGE_STATS, **xstats}
+    cut = _graph_cut(s)
+    st = _order_chains(cut, _doubling_local(cut["succ0"], cut["pred0"]))
+    return st, dict(ZERO_EXCHANGE_STATS)
 
 
 # ---------------------------------------------------------------------------
@@ -490,9 +507,10 @@ def _device_contig_gen(
     """Device array path of the ``contig_gen`` op (DESIGN.md §2.7/§2.9).
 
     ``distribution="gspmd"`` (default) leaves partitioning to the
-    auto-sharder; ``"shard_map"`` routes the doubling middle through the
-    explicit-exchange path over ``mesh`` and surfaces the per-device
-    ``exchange_words``/``exchange_rounds`` in ``ContigSet.stats``.  Both
+    auto-sharder; ``"shard_map"`` routes the whole chain stage (branch cut
+    → doubling → chain ordering) through the single explicit-exchange
+    region over ``mesh`` and surfaces the per-device, per-phase
+    ``exchange_words*``/``exchange_rounds*`` in ``ContigSet.stats``.  Both
     distributions produce bit-identical tensors."""
     codes = jnp.asarray(codes, jnp.uint8)
     lengths = jnp.asarray(lengths, jnp.int32)
@@ -582,6 +600,7 @@ def _reference_contig_gen(
             "n_branch_cut": int(n_branch_cut),
             "cc_iterations": 0,
             "distribution": "host",
+            **ZERO_EXCHANGE_STATS,
         },
     )
 
@@ -608,12 +627,13 @@ def generate_contigs(
         (they emit no singleton contig).
       backend: ``"reference"`` (host walk), ``"pallas"`` (device array
         path) or ``"auto"`` (platform detection), per DESIGN.md §2.5.
-      distribution: partitioning of the device path's doubling middle —
-        ``"gspmd"`` (auto-sharded) or ``"shard_map"`` (explicit
-        ``ppermute``/``psum`` exchanges over ``mesh``; DESIGN.md §2.9).
-        Only the device path partitions: when ``backend`` resolves to
-        ``"reference"`` the knob has no effect and the returned stats
-        report ``distribution="host"``.
+      distribution: partitioning of the device path's chain stage —
+        ``"gspmd"`` (auto-sharded) or ``"shard_map"`` (branch cut, doubling
+        and ring-bitonic chain ordering under one explicit
+        ``ppermute``/``psum`` exchange region over ``mesh``; DESIGN.md
+        §2.9/§2.10).  Only the device path partitions: when ``backend``
+        resolves to ``"reference"`` the knob has no effect and the returned
+        stats report ``distribution="host"``.
       mesh / row_axes: mesh for ``distribution="shard_map"`` (defaults: a 1D
         mesh over all devices; grid-row axes per ``infer_row_axes``).
 

@@ -71,9 +71,10 @@ class PipelineConfig:
     # kernel backend for the hot ops (x-drop extension, min-plus squares):
     # "auto" = compiled Pallas on TPU, reference jnp elsewhere (DESIGN.md §2.5)
     backend: str = "auto"
-    # distribution of the device contig path's doubling middle (DESIGN.md
-    # §2.9): "gspmd" = auto-sharded, "shard_map" = explicit ppermute/psum
-    # neighbor exchanges over `mesh` (a 1D device mesh is built when None)
+    # distribution of the device contig path's chain stage (DESIGN.md
+    # §2.9/§2.10): "gspmd" = auto-sharded, "shard_map" = branch cut +
+    # doubling + ring-bitonic ordering under one explicit ppermute/psum
+    # exchange region over `mesh` (a 1D device mesh is built when None)
     distribution: str = "gspmd"
     mesh: Any = None
 
@@ -245,6 +246,11 @@ def assemble(codes, lengths, cfg: PipelineConfig = PipelineConfig()) -> Assembly
     )
     t0 = _tic(timings, "TrReduction", t0, s_mat.cols)
     stats["tr_iterations"] = int(tr_stats.iterations)
+    # the kernel path that actually ran: transitive_reduction_fused silently
+    # downgrades backend="pallas" to the sampled ELL square above
+    # TR_DENSE_MAX_ROWS, and benchmark rows must label the real path
+    stats["tr_backend"] = tr_stats.backend
+    stats["tr_overflow"] = int(tr_stats.n_overflow)
     stats["nnz_S"] = int(s_mat.nnz())
     stats["s_density"] = stats["nnz_S"] / max(1, int(n))
 
@@ -264,9 +270,12 @@ def assemble(codes, lengths, cfg: PipelineConfig = PipelineConfig()) -> Assembly
     # the backend resolved to the reference walk (the knob then has no
     # effect — surfaced rather than silently re-labelled)
     stats["distribution"] = cset.stats["distribution"]
-    if "exchange_words" in cset.stats:
-        stats["exchange_words"] = cset.stats["exchange_words"]
-        stats["exchange_rounds"] = cset.stats["exchange_rounds"]
+    # exchange accounting is present-and-zero on paths without explicit
+    # exchanges (gspmd / host), so distribution-axis benchmark rows compare
+    # without key-existence checks (DESIGN.md §2.10)
+    for key, val in cset.stats.items():
+        if key.startswith("exchange_"):
+            stats[key] = val
 
     # --- Consensus: pileup polishing of the contig tensor (§2.8) ---
     cres = None

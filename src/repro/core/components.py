@@ -52,6 +52,39 @@ def _log2_ceil(n: int) -> int:
     return max(1, int(n - 1).bit_length())
 
 
+def expand_state_rows(
+    cols: jnp.ndarray, vals: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Row-local core of :func:`expand_states`: expand ``(m, K)`` string-
+    matrix rows (MinPlus 4-vector values ``(m, K, 4)``) into the ``(2m, 2K)``
+    state-graph rows they generate, with scalar suffix values.
+
+    Row ``i`` of the input produces state rows ``2i`` (strand a=0) and
+    ``2i+1`` (a=1); output *column* ids are global state ids ``2j+b``
+    regardless of which rows are present, so the expansion can run on any
+    contiguous row shard — this is what lets the shard_map contig stage
+    (``core/components_dist.py``) expand its local read rows without any
+    exchange.  Rows are recompacted to the sorted-ascending ELL invariant.
+    Returns ``(cols, vals)`` of shape ``(2m, 2K)``.
+    """
+    n, k = cols.shape
+    # vals (m, K, 4) -> (m, 2, K, 2): [read, a, slot, b]
+    v4 = jnp.transpose(vals.reshape(n, k, 2, 2), (0, 2, 1, 3))
+    j = cols[:, None, :, None]  # broadcast to [read, a, slot, b]
+    tgt = 2 * j + jnp.arange(2)[None, None, None, :]
+    out = jnp.where((j >= 0) & jnp.isfinite(v4), tgt, NO_COL)
+    out = out.reshape(2 * n, 2 * k).astype(jnp.int32)
+    sval = v4.reshape(2 * n, 2 * k)
+    # recompact: sort each row by column, invalid slots (key=BIG) to the end
+    key = jnp.where(out >= 0, out, _BIG)
+    order = jnp.argsort(key, axis=1)
+    sorted_key = jnp.take_along_axis(key, order, axis=1)
+    out_cols = jnp.where(sorted_key < _BIG, sorted_key, NO_COL)
+    out_vals = jnp.take_along_axis(sval, order, axis=1)
+    out_vals = jnp.where(out_cols >= 0, out_vals, jnp.inf)
+    return out_cols, out_vals
+
+
 def expand_states(s: EllMatrix) -> EllMatrix:
     """Expand an n×n MinPlus-4-vector string matrix into its 2n×2n state
     graph: combo ``2a+b`` of edge ``i→j`` becomes the scalar-valued edge
@@ -65,23 +98,11 @@ def expand_states(s: EllMatrix) -> EllMatrix:
 
     Rows are recompacted to the EllMatrix sorted-ascending invariant.  The
     output capacity is 2K: each of the K source slots contributes at most two
-    targets (``b ∈ {0, 1}``) per source strand ``a``.
+    targets (``b ∈ {0, 1}``) per source strand ``a``.  The row-local
+    expansion itself is :func:`expand_state_rows`.
     """
-    n, k = s.cols.shape
-    # vals (n, K, 4) -> (n, 2, K, 2): [read, a, slot, b]
-    v4 = jnp.transpose(s.vals.reshape(n, k, 2, 2), (0, 2, 1, 3))
-    j = s.cols[:, None, :, None]  # broadcast to [read, a, slot, b]
-    tgt = 2 * j + jnp.arange(2)[None, None, None, :]
-    cols = jnp.where((j >= 0) & jnp.isfinite(v4), tgt, NO_COL)
-    cols = cols.reshape(2 * n, 2 * k).astype(jnp.int32)
-    vals = v4.reshape(2 * n, 2 * k)
-    # recompact: sort each row by column, invalid slots (key=BIG) to the end
-    key = jnp.where(cols >= 0, cols, _BIG)
-    order = jnp.argsort(key, axis=1)
-    sorted_key = jnp.take_along_axis(key, order, axis=1)
-    out_cols = jnp.where(sorted_key < _BIG, sorted_key, NO_COL)
-    out_vals = jnp.take_along_axis(vals, order, axis=1)
-    out_vals = jnp.where(out_cols >= 0, out_vals, jnp.inf)
+    n = s.cols.shape[0]
+    out_cols, out_vals = expand_state_rows(s.cols, s.vals)
     return EllMatrix(cols=out_cols, vals=out_vals, n_cols=2 * n)
 
 

@@ -47,14 +47,27 @@ TR_DENSE_MAX_ROWS = 4096
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=["iterations", "nnz_initial", "nnz_final", "n_overflow"],
-    meta_fields=[],
+    meta_fields=["backend"],
 )
 @dataclasses.dataclass
 class TRStats:
+    """Convergence + integrity counters of one transitive-reduction run.
+
+    ``n_overflow`` counts N-capacity overflow events of the faithful path —
+    when it is nonzero the faithful result may have lost min-candidates, so
+    any faithful-vs-fused divergence must be read against it (asserted in
+    ``tests/test_transitive_reduction.py``).  ``backend`` records the kernel
+    path that *actually ran* (``"reference"`` / ``"pallas"``): the fused
+    variant silently falls back to the sampled ELL square above
+    ``TR_DENSE_MAX_ROWS``, and benchmark rows must not mislabel that
+    (surfaced as ``tr_backend`` in pipeline stats / ``bench_breakdown``).
+    """
+
     iterations: jnp.ndarray
     nnz_initial: jnp.ndarray
     nnz_final: jnp.ndarray
     n_overflow: jnp.ndarray  # N-capacity overflow events (faithful path only)
+    backend: str = "reference"  # backend actually used (post-fallback)
 
 
 def row_max_suffix(r: EllMatrix) -> jnp.ndarray:
@@ -133,7 +146,8 @@ def _tr_impl(
     init = (r, jnp.int32(-1), nnz0.astype(jnp.int32), jnp.int32(0), jnp.int32(0))
     r_out, _, nnz_f, iters, ovf = jax.lax.while_loop(cond, body, init)
     return r_out, TRStats(
-        iterations=iters, nnz_initial=nnz0, nnz_final=nnz_f, n_overflow=ovf
+        iterations=iters, nnz_initial=nnz0, nnz_final=nnz_f, n_overflow=ovf,
+        backend=backend if fused else "reference",
     )
 
 
@@ -171,7 +185,10 @@ def transitive_reduction_fused(
     ``backend="pallas"`` routes the sampled square through the dense
     min-plus Pallas kernel (bit-identical, see ``_tr_impl``); graphs wider
     than ``TR_DENSE_MAX_ROWS`` fall back to the O(n·K) ELL square rather
-    than materializing an O(n²) dense operand per iteration."""
+    than materializing an O(n²) dense operand per iteration.  The fallback
+    is *recorded*: ``TRStats.backend`` reports the path that actually ran,
+    so a ``backend="pallas"`` request downgraded to ``"reference"`` cannot
+    be mislabelled in benchmark rows (`bench_breakdown`'s ``tr_stats``)."""
     b = resolve_backend(backend)
     if b == "pallas" and r.cols.shape[0] > TR_DENSE_MAX_ROWS:
         b = "reference"

@@ -1,8 +1,41 @@
 # NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device.
 # Distributed tests spawn subprocesses that set
 # --xla_force_host_platform_device_count themselves.
+import os
+
 import numpy as np
 import pytest
+
+# Per-test wall-clock budget (seconds) for the call phase.  The tier-1 suite
+# must stay under a ~5-minute total CPU budget; any single unmarked test
+# burning more than this is a regression we want CI to *fail on*, not absorb
+# (pytest-timeout is not in the baked image, so the assert lives here).
+# `slow`/`dist`-marked tests are exempt; REPRO_TEST_BUDGET_S overrides, 0
+# disables.
+TEST_BUDGET_S = float(os.environ.get("REPRO_TEST_BUDGET_S", "60"))
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_makereport(item, call):
+    """Fail any unmarked test whose call phase exceeds ``TEST_BUDGET_S``."""
+    outcome = yield
+    rep = outcome.get_result()
+    if (
+        rep.when == "call"
+        and rep.passed
+        and TEST_BUDGET_S > 0
+        and rep.duration > TEST_BUDGET_S
+        and item.get_closest_marker("slow") is None
+        and item.get_closest_marker("dist") is None
+    ):
+        rep.outcome = "failed"
+        rep.longrepr = (
+            f"{item.nodeid}: call took {rep.duration:.1f}s, over the "
+            f"{TEST_BUDGET_S:.0f}s per-test budget (tier-1 must stay under "
+            f"the 5-minute suite budget).  Mark it `slow` (excluded from "
+            f"the default run) or `dist`, shrink it, or override with "
+            f"REPRO_TEST_BUDGET_S."
+        )
 
 
 @pytest.fixture

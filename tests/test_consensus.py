@@ -208,6 +208,7 @@ def _pipeline_cfg():
     )
 
 
+@pytest.mark.slow  # full pipeline at depth: ~14s, over the tier-1 budget
 def test_error_free_pipeline_round_trip():
     rng = np.random.default_rng(3)
     g = simulate_genome(rng, 3000)
@@ -222,6 +223,7 @@ def test_error_free_pipeline_round_trip():
         assert np.array_equal(a.codes, b.codes)
 
 
+@pytest.mark.slow  # 5%-error pipeline + polish: ~16s, heaviest consensus case
 def test_majority_vote_recovery_5pct():
     """Acceptance criterion: at 5% read error and ≥10× depth, polishing
     lifts measured per-base identity vs the simulated genome to ≥ 0.99

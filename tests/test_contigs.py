@@ -134,6 +134,7 @@ def test_parity_simulated_linear_genome():
     _assert_parity(res.s_graph, rs.codes, rs.lengths, res.contained)
 
 
+@pytest.mark.slow  # simulated circular genome through the pipeline: ~14s
 def test_parity_simulated_circular_genome():
     """Circular genome → the string graph closes into a cycle; the canonical
     cut at the minimum state must agree between backends."""
@@ -267,6 +268,7 @@ def test_contig_stats_all_zero_lengths():
     )
 
 
+@pytest.mark.slow  # second full pipeline run purely for stats plumbing: ~15s
 def test_pipeline_stats_carry_contig_gen_counters():
     rng = np.random.default_rng(7)
     g = simulate_genome(rng, 2000)
@@ -283,3 +285,31 @@ def test_pipeline_stats_carry_contig_gen_counters():
     cs = res.stats["contigs"]
     assert set(cs) == {"n_contigs", "total_length", "n50", "longest", "l50",
                        "mean_length"}
+
+
+def test_exchange_stats_present_and_zero_without_explicit_exchange():
+    """Bugfix guard (PR 5): the exchange accounting keys are part of the
+    ``ContigSet.stats`` contract on *every* path — present-and-zero on the
+    gspmd device path and the host walk (rather than absent), so
+    distribution-axis benchmark rows compare without key-existence
+    checks."""
+    n, edges = SCENARIOS["linear"]
+    codes, lengths = _reads(n)
+    s = string_matrix_from_edges(n, edges)
+    keys = ("exchange_words", "exchange_rounds", "exchange_words_cut",
+            "exchange_words_doubling", "exchange_words_sort",
+            "exchange_rounds_doubling", "exchange_rounds_sort")
+    ref = generate_contigs(s, codes, lengths, backend="reference")
+    dev = generate_contigs(s, codes, lengths, backend="pallas",
+                           distribution="gspmd")
+    for cset, dist in ((ref, "host"), (dev, "gspmd")):
+        assert cset.stats["distribution"] == dist
+        for k in keys:
+            assert cset.stats[k] == 0, (dist, k)
+    # ...and the shard_map path on a single device: keys live, ring
+    # degenerate, so the words are *measured* zero while rounds still count
+    sm = generate_contigs(s, codes, lengths, backend="pallas",
+                          distribution="shard_map")
+    assert sm.stats["distribution"] == "shard_map"
+    assert sm.stats["exchange_words"] == 0  # P == 1: (P-1)/P = 0
+    assert sm.stats["exchange_rounds"] > 0

@@ -274,6 +274,7 @@ print("OK")
 """)
 
 
+@pytest.mark.slow  # heavyweight mesh parametrization (MoE dispatch): ~6s on top of dist
 def test_moe_shardmap_matches_gspmd_dispatch():
     run_with_devices("""
 import numpy as np, jax, jax.numpy as jnp, dataclasses
@@ -295,3 +296,130 @@ l_gs = float(loss_fn(params, b, dataclasses.replace(cfg, moe_impl="gspmd"),
 assert abs(l_sm - l_gs) < 0.2, (l_sm, l_gs)
 print("OK", l_sm, l_gs)
 """)
+
+
+def test_contig_stage_shard_map_end_to_end_parity():
+    """End-to-end shard_map contig stage (DESIGN.md §2.10): branch cut,
+    doubling and ring-bitonic chain ordering all inside one shard_map region
+    must produce a bit-identical ContigSet to the GSPMD path — including
+    odd-n read padding — and match the host walk contig-by-contig.  The
+    per-phase exchange accounting must be live (cut/doubling/sort all
+    nonzero on a P>1 row axis), sum to the total, and the data-independent
+    sort term must equal the analytic model exactly."""
+    import os
+
+    root = os.path.join(os.path.dirname(__file__), "..")
+    run_with_devices(f"""
+import sys
+sys.path.insert(0, {root!r})
+import numpy as np, jax, jax.numpy as jnp
+from repro.assembly.contig_gen import (
+    generate_contigs, string_matrix_from_edges,
+)
+from repro.core.components_dist import infer_row_axes
+from repro.launch.mesh import make_test_mesh
+from benchmarks.bench_comm_model import words_chain_sort, words_graph_cut
+
+mesh = make_test_mesh((2, 2))
+n = 23  # odd: forces the pad-to-multiple-of-P read path
+rng = np.random.default_rng(0)
+edges = []
+for i in range(n - 1):
+    if i % 7 != 6:  # several chains
+        edges.append((i, i + 1, 0, 0, 30))
+        edges.append((i + 1, i, 1, 1, 30))
+edges += [(3, 9, 0, 0, 12), (12, 5, 1, 0, 11)]   # branches
+edges += [(21, 18, 0, 0, 7), (18, 21, 1, 1, 7)]  # extra cycle edges
+S = string_matrix_from_edges(n, edges)
+codes = jnp.asarray(rng.integers(0, 4, (n, 128)), jnp.uint8)
+lengths = jnp.asarray(rng.integers(80, 120, n), jnp.int32)
+
+ref = generate_contigs(S, codes, lengths, backend="reference")
+gs = generate_contigs(S, codes, lengths, backend="pallas",
+                      distribution="gspmd")
+sm = generate_contigs(S, codes, lengths, backend="pallas",
+                      distribution="shard_map", mesh=mesh)
+
+for k in ("codes", "lengths", "states", "offsets", "widths"):
+    assert np.array_equal(np.asarray(getattr(gs, k)),
+                          np.asarray(getattr(sm, k))), k
+assert gs.n_contigs == sm.n_contigs
+assert gs.stats["n_branch_cut"] == sm.stats["n_branch_cut"]
+assert gs.stats["cc_iterations"] == sm.stats["cc_iterations"]
+
+# per-phase exchange accounting: live, additive, and the data-independent
+# terms equal the independent analytic model
+st = sm.stats
+assert st["exchange_words_cut"] > 0
+assert st["exchange_words_doubling"] > 0
+assert st["exchange_words_sort"] > 0
+assert st["exchange_words"] == (st["exchange_words_cut"]
+                                + st["exchange_words_doubling"]
+                                + st["exchange_words_sort"])
+p = 1
+for a in infer_row_axes(mesh):
+    p *= mesh.shape[a]
+assert st["exchange_words_sort"] == words_chain_sort(2 * n, p)
+assert st["exchange_words_cut"] == words_graph_cut(2 * n, p)
+# the gspmd path reports the same keys, present-and-zero
+for k, v in gs.stats.items():
+    if k.startswith("exchange_"):
+        assert v == 0, (k, v)
+
+rc, dc = ref.to_contigs(), sm.to_contigs()
+assert ref.n_contigs == sm.n_contigs
+for a, b in zip(rc, dc):
+    assert a.reads == b.reads and a.length == b.length
+    assert np.array_equal(a.codes, b.codes)
+print("OK", sm.n_contigs, st["exchange_words"])
+""")
+
+
+def test_contig_stage_matches_doubling_composition_on_multipod():
+    """Golden parity of the single-region contig stage against the PR 4
+    composition (GSPMD graph cut → shard_map doubling middle → GSPMD chain
+    ordering) on a (pod, data, model) mesh with row_axes spanning pod×data:
+    every chain-state array — sorted state permutation, eligibility, ranks,
+    chain indices, suffix/edge vectors — must be bit-identical, odd n
+    included."""
+    run_with_devices("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.assembly.contig_gen import (
+    _graph_cut, _order_chains, string_matrix_from_edges,
+)
+from repro.core.components_dist import (
+    contig_stage_shard_map, doubling_shard_map, infer_row_axes,
+)
+from repro.launch.mesh import make_test_mesh
+
+mesh = make_test_mesh((2, 2, 2), ("pod", "data", "model"))
+assert infer_row_axes(mesh) == ("pod", "data")
+n = 53  # odd: pad path on a P=4 row grid
+rng = np.random.default_rng(3)
+edges = []
+for i in range(n - 1):
+    if i % 11 != 10:
+        edges.append((i, i + 1, 0, 0, 25))
+        edges.append((i + 1, i, 1, 1, 25))
+edges += [(5, 20, 0, 0, 9), (33, 12, 1, 0, 8)]   # branches
+edges += [(50, 44, 0, 0, 6), (44, 50, 1, 1, 6)]  # cycle edges
+S = string_matrix_from_edges(n, edges)
+
+# PR 4 composition: GSPMD cut -> shard_map doubling -> GSPMD ordering
+cut = _graph_cut(S)
+d = doubling_shard_map(cut["succ0"], cut["pred0"], mesh=mesh)
+dbl = {k: d[k] for k in ("labels", "head", "rank")}
+dbl["cc_iterations"] = d["cc_iterations"]
+st_old = _order_chains(cut, dbl)
+
+# PR 5: everything in one shard_map region
+st_new, xstats = contig_stage_shard_map(S, mesh=mesh)
+
+for k in ("state_s", "elig_s", "rank_s", "chain_idx_s", "new_chain",
+          "insuf", "has_edge"):
+    assert np.array_equal(np.asarray(st_old[k]), np.asarray(st_new[k])), k
+for k in ("n_chains", "max_chain", "n_branch_cut", "cc_iterations"):
+    assert int(st_old[k]) == int(st_new[k]), k
+assert xstats["exchange_words_sort"] > 0
+print("OK", int(st_new["n_chains"]), xstats["exchange_words"])
+""", n_devices=8)

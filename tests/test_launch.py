@@ -1,6 +1,7 @@
 """Launch-layer units: HLO collective parser, roofline math, train resume."""
 
 import numpy as np
+import pytest
 
 from repro.launch.hlo_analysis import collective_bytes
 from repro.launch.roofline import RooflineTerms, model_flops, roofline_fraction
@@ -51,6 +52,7 @@ def test_model_flops():
     assert model_flops(C(), "decode", 9999, 4) == 2e6 * 4
 
 
+@pytest.mark.slow  # two train runs + checkpoint restore: ~10s
 def test_train_resume_determinism(tmp_path):
     """Restart-from-checkpoint reproduces the uninterrupted run exactly
     (deterministic data pipeline + checkpointed state)."""

@@ -112,3 +112,53 @@ def test_orientation_blocks_reduction():
                       n_cols=3, capacity=4, semiring=SR)
     s, _ = transitive_reduction_fused(mat, fuzz=1.0)
     assert (0, 2) in from_ell(s)
+
+
+def test_faithful_overflow_reported_when_fused_diverges():
+    """Bugfix guard (PR 5): when the faithful path's N = R² capacity
+    overflows it can lose min-candidates and diverge from the fused/sampled
+    square — that divergence must be *reported* via ``TRStats.n_overflow``,
+    never silent.  The fused path cannot overflow by construction."""
+    r, _ = _rand_graph(0)
+    s_faith, st_faith = transitive_reduction(r, fuzz=50.0, n_capacity=2)
+    s_fused, st_fused = transitive_reduction_fused(r, fuzz=50.0)
+    assert not graphs_equal(from_ell(s_faith), from_ell(s_fused))
+    assert int(st_faith.n_overflow) > 0  # the divergence is accounted for
+    assert int(st_fused.n_overflow) == 0
+    # ...and with enough capacity the two agree and nothing overflows
+    s_ok, st_ok = transitive_reduction(r, fuzz=50.0,
+                                       n_capacity=r.capacity ** 2)
+    assert int(st_ok.n_overflow) == 0
+    assert graphs_equal(from_ell(s_ok), from_ell(s_fused))
+
+
+def test_fused_records_backend_actually_used():
+    """Bugfix guard (PR 5): ``transitive_reduction_fused`` silently
+    downgrades ``backend="pallas"`` to the sampled ELL square when
+    ``n > TR_DENSE_MAX_ROWS``; ``TRStats.backend`` must record the path
+    that actually ran so benchmark rows cannot mislabel the kernel path."""
+    from repro.core.transitive_reduction import TR_DENSE_MAX_ROWS
+
+    r_small, _ = _rand_graph(1)
+    _, st_small = transitive_reduction_fused(r_small, fuzz=50.0,
+                                             backend="pallas")
+    assert st_small.backend == "pallas"
+    _, st_ref = transitive_reduction_fused(r_small, fuzz=50.0,
+                                           backend="reference")
+    assert st_ref.backend == "reference"
+
+    n_big = TR_DENSE_MAX_ROWS + 4
+    rows = jnp.arange(8, dtype=jnp.int32)
+    cols = rows + 1
+    vals = np.full((8, 4), np.inf, np.float32)
+    vals[:, 0] = 10.0
+    r_big, _ = from_coo(rows, cols, jnp.asarray(vals),
+                        jnp.ones(8, bool), n_rows=n_big, n_cols=n_big,
+                        capacity=4, semiring=SR)
+    _, st_big = transitive_reduction_fused(r_big, fuzz=50.0,
+                                           backend="pallas")
+    assert st_big.backend == "reference"  # downgrade recorded, not silent
+    # the faithful path ignores the knob by contract and says so
+    _, st_faith = transitive_reduction(r_small, fuzz=50.0,
+                                       backend="pallas")
+    assert st_faith.backend == "reference"
