@@ -104,6 +104,24 @@ def words_chain_sort(n_states, p):
     return n_loc * (p - 1) + 3 * n_loc * stages
 
 
+def words_summa(*, n_rows, a_block_slots, a_words_per_slot,
+                m_rows, b_block_slots, b_words_per_slot, pr, pc):
+    """Per-device words of the explicit-exchange ring SUMMA
+    (``core.summa.summa_ring``): pc−1 rotations, each shipping the device's
+    whole A panel (``n/pr`` rows × block slots) plus its whole B panel
+    (``m/pr`` rows × block slots); a slot is the int32 column id + the value
+    leaves behind it (``core.summa._slot_words``).  This is the paper's
+    Table-I W = a·m/√P term with the dense ELL panel standing in for a·m/P
+    per device and √P−1 ≈ √P stages.  Data-independent (the panels travel
+    whole, occupied or not), so the measured ``exchange_words_summa`` stat
+    must equal this exactly — ``scripts/check_smoke_comm.py`` asserts it."""
+    if pc <= 1:
+        return 0
+    wa = (n_rows // pr) * a_block_slots * a_words_per_slot
+    wb = (m_rows // pr) * b_block_slots * b_words_per_slot
+    return (pc - 1) * (wa + wb)
+
+
 def run():
     rows = []
     for name, ds in DATASETS.items():

@@ -5,7 +5,13 @@ The 1D variant emulates diBELLA 1D's distributed-hash-table detection: group
 k-mer instances by k-mer (the "owner bucket"), emit all read pairs per bucket
 (a² per k-mer), then globally deduplicate — an outer-product SpGEMM.  The 2D
 variant is our row-expansion SpGEMM on A·Aᵀ.  Also reports the model word
-counts (a²m/P vs am/√P, paper §V-B)."""
+counts (a²m/P vs am/√P, paper §V-B).
+
+``distributions=("local", "shard_map")`` adds the explicit-exchange ring
+SUMMA rows (DESIGN.md §2.11): ``overlap[shard_map]/ring_<pr>x<pc>`` with the
+measured per-``ppermute`` ``exchange_words_summa`` next to the analytic
+``model_words_summa`` (``bench_comm_model.words_summa``) in the derived
+field — ``scripts/check_smoke_comm.py`` asserts they match exactly."""
 
 from __future__ import annotations
 
@@ -16,13 +22,13 @@ import jax
 import jax.numpy as jnp
 
 
-def _inputs():
+def _inputs(genome=10_000):
     from repro.assembly.counter import build_matrices, count_and_select
     from repro.assembly.kmers import extract_kmers
     from repro.assembly.simulate import simulate_genome, simulate_reads
 
     rng = np.random.default_rng(3)
-    g = simulate_genome(rng, 10_000)
+    g = simulate_genome(rng, genome)
     rs = simulate_reads(g, depth=12, mean_len=900, std_len=120,
                         error_rate=0.03, seed=4)
     km = extract_kmers(jnp.asarray(rs.codes), jnp.asarray(rs.lengths), k=15)
@@ -55,12 +61,66 @@ def _outer_product_1d(at, n_reads, cap):
     return c
 
 
-def run():
+def _ring_rows(a, at, n_reads, cap):
+    """Time the explicit-exchange ring SUMMA path and cross-check words.
+
+    Emits one ``overlap[shard_map]/ring_<pr>x<pc>`` row whose derived field
+    carries the measured ``exchange_words_summa`` (counted per ``ppermute``
+    at trace time) and the analytic ``model_words_summa`` from Table I —
+    ``scripts/check_smoke_comm.py`` requires the two to agree.
+    """
+    from repro.assembly.counter import first_semiring
+    from repro.core.semiring import overlap_semiring as OV
+    from repro.core.summa import default_summa_mesh, overlap_spgemm_shard_map
+
+    from .bench_comm_model import words_summa
+
+    mesh = default_summa_mesh()
+    pr = mesh.shape["data"]
+    pc = mesh.shape["model"]
+
+    def call():
+        c, ovf, st = overlap_spgemm_shard_map(
+            a, at, semiring=OV, operand_semiring=first_semiring,
+            capacity=cap, mesh=mesh)
+        c.cols.block_until_ready()
+        return c, st
+
+    c, st = call()  # warm-up (includes compile)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        c, st = call()
+    t_ring = (time.perf_counter() - t0) / 3 * 1e6
+
+    n_pad = -(-n_reads // pr) * pr
+    m_rows = at.cols.shape[0]
+    m_pad = -(-m_rows // pr) * pr
+    # {"pos"} payload: 1 col word + 1 value word per slot.
+    wm = words_summa(n_rows=n_pad, a_block_slots=a.capacity,
+                     a_words_per_slot=2, m_rows=m_pad,
+                     b_block_slots=at.capacity, b_words_per_slot=2,
+                     pr=pr, pc=pc)
+    derived = (f"exchange_words_summa={st['exchange_words_summa']}"
+               f";model_words_summa={wm}"
+               f";exchange_rounds_summa={st['exchange_rounds_summa']}"
+               f";summa_algorithm={st['summa_algorithm']}"
+               f";hbm_round_trips={st.get('spgemm_hbm_round_trips', 0)}"
+               f";nnzC={int(c.nnz())}")
+    return [(f"overlap[shard_map]/ring_{pr}x{pc}", t_ring, derived)]
+
+
+def run(distributions=("local",), genome=10_000):
     from repro.core.semiring import overlap_semiring as OV
     from repro.core.spgemm import spgemm
 
-    a, at, kc, rs = _inputs()
+    a, at, kc, rs = _inputs(genome)
     n = rs.n_reads
+
+    rows = []
+    if "shard_map" in distributions:
+        rows += _ring_rows(a, at, n, 64)
+    if "local" not in distributions:
+        return rows
 
     f2d = jax.jit(lambda: spgemm(a, at, semiring=OV, capacity=64))
     c2d, _ = f2d()
@@ -88,10 +148,11 @@ def run():
     p = 1024
     w1d = (am / m_real) * am / p if m_real else 0
     w2d = am / (p ** 0.5)
-    return [
+    rows += [
         ("overlap/2d_spgemm", t_2d, f"nnzC={int(c2d.nnz())}"),
         ("overlap/1d_outer_product", t_1d,
          f"pattern_mismatches={same};speedup_2d={t_1d / t_2d:.2f}x"),
         ("overlap/model_words_P1024", 0.0,
          f"W1D={w1d:.3e};W2D={w2d:.3e}"),
     ]
+    return rows

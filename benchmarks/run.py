@@ -5,13 +5,20 @@ Prints ``name,us_per_call,derived`` CSV (per the harness contract) and, with
 ``{name, op, backend, shape, ms, derived}`` so the perf trajectory can be
 tracked across commits (CI uploads a smoke-size artifact per run).
 
+``--snapshot`` is the committed-artifact mode: it implies ``--smoke``,
+restricts to the snapshot module set (``_SNAPSHOT_ONLY``), and writes
+``BENCH_<n>.json`` at the repo root (README "Benchmark snapshots" documents
+the record format).  ``scripts/check_bench_regression.py`` diffs a fresh
+snapshot against the committed one.
+
     python -m benchmarks.run [--only contigs,consensus] [--smoke]
-                             [--json BENCH.json]
+                             [--json BENCH.json] [--snapshot]
 """
 
 import argparse
 import inspect
 import json
+import os
 import re
 import sys
 
@@ -26,7 +33,18 @@ _SMOKE = {
     "contigs": {"sweep": (256,), "distributions": ("gspmd", "shard_map")},
     "consensus": {"sweep": (256,)},
     "scaling": {"sweep": (256,)},
+    # ring-SUMMA rows only: the local Fig-9 variants are too slow for CI, and
+    # check_smoke_comm.py needs the measured-vs-model exchange_words_summa row.
+    "overlap": {"distributions": ("shard_map",), "genome": 4_000},
 }
+
+# module keys included in a --snapshot run (per-op wall-clock + exchange
+# words at smoke size; the rest of the suite is full-size only)
+_SNAPSHOT_ONLY = ("contigs", "consensus", "overlap")
+
+# committed snapshot artifact for this PR sequence (bumped per perf PR)
+_SNAPSHOT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_6.json")
 
 
 def _modules():
@@ -69,7 +87,17 @@ def main(argv=None) -> None:
                     help="comma-separated module keys (e.g. contigs,consensus)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced sizes for CI (see _SMOKE)")
+    ap.add_argument("--snapshot", action="store_true",
+                    help="write the committed smoke snapshot "
+                         f"({os.path.basename(_SNAPSHOT_PATH)}); implies "
+                         "--smoke and restricts to " + ",".join(_SNAPSHOT_ONLY))
     ns = ap.parse_args(argv)
+    if ns.snapshot:
+        ns.smoke = True
+        if ns.only is None:
+            ns.only = ",".join(_SNAPSHOT_ONLY)
+        if ns.json is None:
+            ns.json = _SNAPSHOT_PATH
     mods = _modules()
     only = set(ns.only.split(",")) if ns.only else None
     if only is not None:

@@ -1,0 +1,100 @@
+#!/usr/bin/env python
+"""Diff a fresh benchmark snapshot against committed ``BENCH_*.json`` ones.
+
+Usage (CI calls this after regenerating the snapshot on the smoke grid)::
+
+    python scripts/check_bench_regression.py FRESH.json [PREVIOUS.json ...]
+
+The first argument is the freshly generated snapshot; every further argument
+is a previously committed trajectory file (``git ls-files 'BENCH_*.json'``).
+Rows are matched by ``name``.  A row regresses when its fresh wall-clock
+exceeds ``RATIO``× the *best* previous measurement of that row — a deliberate
+threshold far above runner noise, so only gross slowdowns (an accidental
+de-jit, a dropped fused path) fail CI while normal jitter passes.
+
+Rows present only on one side are reported informationally and never fail:
+the benchmark set is expected to grow per PR, and a renamed row should not
+block the PR that renames it.  With no previous snapshots at all the script
+succeeds immediately (first PR in the trajectory).
+
+Exit status: 0 = no gross regression, 1 = at least one row regressed,
+2 = usage error.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+# fresh ms must stay below RATIO x best previous ms for the same row name
+RATIO = 5.0
+
+# rows faster than this on both sides are skipped: at microsecond scale the
+# ratio test measures timer noise, not the benchmark
+MIN_MS = 1.0
+
+
+def _load(path: str) -> dict:
+    """Map ``name`` -> ``ms`` for one snapshot file."""
+    with open(path) as f:
+        records = json.load(f)
+    return {r["name"]: float(r["ms"]) for r in records if "name" in r}
+
+
+def check(fresh: dict, previous: dict) -> list:
+    """Return ``(name, message)`` regressions of ``fresh`` vs ``previous``
+    (a name -> best-previous-ms map); empty means no gross slowdown."""
+    failures = []
+    for name, ms in sorted(fresh.items()):
+        base = previous.get(name)
+        if base is None:
+            continue  # new row: informational only
+        if ms <= MIN_MS and base <= MIN_MS:
+            continue  # sub-millisecond rows: ratio is timer noise
+        if ms > RATIO * max(base, MIN_MS):
+            failures.append(
+                (name,
+                 f"{ms:.1f} ms vs previous best {base:.1f} ms "
+                 f"(> {RATIO:.0f}x)"))
+    return failures
+
+
+def main(argv) -> int:
+    """Compare ``argv[0]`` against the best of ``argv[1:]`` per row."""
+    if not argv:
+        print("usage: check_bench_regression.py FRESH.json [PREV.json ...]",
+              file=sys.stderr)
+        return 2
+    fresh_path, prev_paths = argv[0], argv[1:]
+    # the fresh file may also appear in the previous list (CI passes
+    # `git ls-files`, and the snapshot itself is committed) — drop it
+    prev_paths = [p for p in prev_paths if p != fresh_path]
+    if not prev_paths:
+        print(f"{fresh_path}: no previous BENCH_*.json to diff against — "
+              "trajectory starts here")
+        return 0
+    fresh = _load(fresh_path)
+    best: dict = {}
+    for path in prev_paths:
+        for name, ms in _load(path).items():
+            if name not in best or ms < best[name]:
+                best[name] = ms
+    failures = check(fresh, best)
+    for name, msg in failures:
+        print(f"{fresh_path}: {name}: {msg}")
+    new = sorted(set(fresh) - set(best))
+    gone = sorted(set(best) - set(fresh))
+    if new:
+        print(f"note: {len(new)} new row(s): {', '.join(new)}")
+    if gone:
+        print(f"note: {len(gone)} row(s) no longer measured: "
+              f"{', '.join(gone)}")
+    if not failures:
+        shared = len(set(fresh) & set(best))
+        print(f"{fresh_path}: no gross perf regression "
+              f"({shared} shared row(s), threshold {RATIO:.0f}x)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

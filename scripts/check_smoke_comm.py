@@ -9,9 +9,16 @@ analytic model (``model_words_sort`` = ``bench_comm_model.words_chain_sort``)
 to within 10%.  The sort network is data-independent, so in practice the two
 are equal — the tolerance only absorbs future schedule tweaks.
 
-Exits 1 when a row disagrees or when no shard_map contig row is present at
-all (a silently dropped distribution axis must fail CI, not pass it).  Run
-from the repo root::
+Also checks every ``overlap[shard_map]`` row under the same contract: the
+measured ring-SUMMA exchange volume (``exchange_words_summa``, accounted per
+``ppermute`` issued by ``core/summa.summa_ring``) against the analytic
+``model_words_summa`` (= ``bench_comm_model.words_summa``, Table I
+W = am/√P).  The ring schedule moves whole ELL panels regardless of data, so
+these too are exactly equal in practice.
+
+Exits 1 when a row disagrees or when no shard_map contig row or shard_map
+overlap row is present at all (a silently dropped distribution axis must
+fail CI, not pass it).  Run from the repo root::
 
     python scripts/check_smoke_comm.py BENCH_smoke.json
 """
@@ -30,32 +37,48 @@ def _field(derived: str, key: str) -> int | None:
     return int(m.group(1)) if m else None
 
 
-def check(records) -> list:
-    """Return ``(name, message)`` failures for the shard_map contig rows of
-    one smoke-artifact record list; empty means the cross-check holds."""
-    failures = []
-    rows = [r for r in records
-            if r.get("op") == "contigs"
+# one (measured, model) field pair per shard_map phase under contract
+_CONTRACTS = (
+    ("contigs", "exchange_words_sort", "model_words_sort"),
+    ("overlap", "exchange_words_summa", "model_words_summa"),
+)
+
+
+def _shard_rows(records, op: str) -> list:
+    return [r for r in records
+            if r.get("op") == op
             and "shard_map" in (r.get("backend") or "")]
-    if not rows:
-        return [("<artifact>",
-                 "no contigs[*/shard_map] rows found — the distribution "
-                 "axis was dropped from the smoke run")]
-    for r in rows:
-        measured = _field(r["derived"], "exchange_words_sort")
-        model = _field(r["derived"], "model_words_sort")
-        if measured is None or model is None:
-            failures.append((r["name"],
-                             f"missing sort-term fields in {r['derived']!r}"))
-            continue
-        if measured == model == 0:
-            continue  # P == 1: ring degenerates, both sides are exactly 0
-        if abs(measured - model) > TOL * max(abs(model), 1):
+
+
+def check(records) -> list:
+    """Return ``(name, message)`` failures for the shard_map contig and
+    overlap rows of one smoke-artifact record list; empty means every
+    cross-check holds."""
+    failures = []
+    for op, mkey, wkey in _CONTRACTS:
+        rows = _shard_rows(records, op)
+        if not rows:
             failures.append(
-                (r["name"],
-                 f"measured exchange_words_sort={measured} deviates from "
-                 f"model_words_sort={model} by more than {TOL:.0%}")
-            )
+                ("<artifact>",
+                 f"no {op}[*/shard_map] rows found — the distribution "
+                 "axis was dropped from the smoke run"))
+            continue
+        for r in rows:
+            measured = _field(r["derived"], mkey)
+            model = _field(r["derived"], wkey)
+            if measured is None or model is None:
+                failures.append(
+                    (r["name"],
+                     f"missing {mkey}/{wkey} fields in {r['derived']!r}"))
+                continue
+            if measured == model == 0:
+                continue  # P == 1: ring degenerates, both sides exactly 0
+            if abs(measured - model) > TOL * max(abs(model), 1):
+                failures.append(
+                    (r["name"],
+                     f"measured {mkey}={measured} deviates from "
+                     f"{wkey}={model} by more than {TOL:.0%}")
+                )
     return failures
 
 
@@ -73,10 +96,11 @@ def main(argv) -> int:
             print(f"{path}: {name}: {msg}")
             failed += 1
         if not failures:
-            n = sum(1 for r in records if r.get("op") == "contigs"
-                    and "shard_map" in (r.get("backend") or ""))
+            counts = ", ".join(
+                f"{len(_shard_rows(records, op))} {op}"
+                for op, _, _ in _CONTRACTS)
             print(f"{path}: comm-model cross-check ok "
-                  f"({n} shard_map contig row(s))")
+                  f"(shard_map rows: {counts})")
     return 1 if failed else 0
 
 

@@ -30,17 +30,23 @@ REPO = Path(__file__).resolve().parent.parent
 
 # the modules whose public APIs carry the documented contracts (PR 5 widened
 # the scope to the TR module — its TRStats.backend accounting is contractual
-# — and the smoke-artifact checker scripts)
+# — and the smoke-artifact checker scripts; PR 6 adds the ring-SUMMA module
+# and the fused SpGEMM kernel family)
 DEFAULT_TARGETS = [
     "src/repro/core/components.py",
     "src/repro/core/components_dist.py",
     "src/repro/core/backend.py",
+    "src/repro/core/summa.py",
     "src/repro/core/transitive_reduction.py",
     "src/repro/assembly/contig_gen.py",
     "src/repro/kernels/cc/ref.py",
     "src/repro/kernels/cc/cc.py",
     "src/repro/kernels/cc/ops.py",
+    "src/repro/kernels/spgemm/ref.py",
+    "src/repro/kernels/spgemm/spgemm.py",
+    "src/repro/kernels/spgemm/ops.py",
     "scripts/check_smoke_comm.py",
+    "scripts/check_bench_regression.py",
     "scripts/lint_docstrings.py",
 ]
 

@@ -21,10 +21,11 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from ..core.backend import resolve_backend
+from ..core.backend import resolve_backend, resolve_distribution
 from ..core.semiring import overlap_semiring
 from ..core.spgemm import spgemm
 from ..core.spmat import map_row_blocks, next_pow2
+from ..core.summa import default_summa_mesh, overlap_spgemm_shard_map
 from ..core.string_graph import build_overlap_graph, classify_overlaps, drop_contained
 from ..core.transitive_reduction import (
     transitive_reduction,
@@ -71,12 +72,17 @@ class PipelineConfig:
     # kernel backend for the hot ops (x-drop extension, min-plus squares):
     # "auto" = compiled Pallas on TPU, reference jnp elsewhere (DESIGN.md §2.5)
     backend: str = "auto"
-    # distribution of the device contig path's chain stage (DESIGN.md
-    # §2.9/§2.10): "gspmd" = auto-sharded, "shard_map" = branch cut +
-    # doubling + ring-bitonic ordering under one explicit ppermute/psum
+    # distribution of the explicitly-exchanged stages (DESIGN.md §2.9-§2.11):
+    # "gspmd" = auto-sharded, "shard_map" = (a) the overlap SpGEMM on the
+    # explicit-exchange ring SUMMA (core/summa.py, 2D ("data", "model") mesh
+    # built when `mesh` lacks a "model" axis) and (b) the contig chain stage's
+    # branch cut + doubling + ring-bitonic ordering under one ppermute/psum
     # exchange region over `mesh` (a 1D device mesh is built when None)
     distribution: str = "gspmd"
     mesh: Any = None
+    # ring-SUMMA stages fused per spgemm_ring_stages call (the fused Pallas
+    # kernel's HBM round trips = ceil(√P / this))
+    summa_stages_per_call: int = 4
 
 
 @dataclasses.dataclass
@@ -140,9 +146,37 @@ def assemble(codes, lengths, cfg: PipelineConfig = PipelineConfig()) -> Assembly
     stats["nnz_A"] = int(a.nnz())
 
     # --- SpGEMM: C = A·Aᵀ under the overlap semiring ---
-    c_mat, ovf_c = spgemm(
-        a, at, semiring=overlap_semiring, capacity=cfg.overlap_capacity
-    )
+    # distribution="shard_map" runs it on the explicit-exchange ring SUMMA
+    # (zero GSPMD sub-stages, DESIGN.md §2.11) — bit-identical to the local
+    # product, with the per-ppermute exchange words surfaced in stats.  The
+    # summa exchange stats are present-and-zero on the gspmd path, same
+    # contract as the contig-stage exchange keys below.
+    stats["exchange_words_summa"] = 0
+    stats["exchange_rounds_summa"] = 0
+    if resolve_distribution(cfg.distribution) == "shard_map":
+        from .counter import first_semiring
+
+        summa_mesh = cfg.mesh
+        if (
+            summa_mesh is None
+            or "model" not in getattr(summa_mesh, "axis_names", ())
+            or len(summa_mesh.axis_names) < 2
+        ):
+            summa_mesh = default_summa_mesh()
+        c_mat, ovf_c, summa_stats = overlap_spgemm_shard_map(
+            a, at, semiring=overlap_semiring,
+            operand_semiring=first_semiring,
+            capacity=cfg.overlap_capacity, mesh=summa_mesh, backend=backend,
+            stages_per_call=cfg.summa_stages_per_call,
+        )
+        stats["overlap_distribution"] = "shard_map"
+        for key, val in summa_stats.items():
+            stats[key] = val
+    else:
+        c_mat, ovf_c = spgemm(
+            a, at, semiring=overlap_semiring, capacity=cfg.overlap_capacity
+        )
+        stats["overlap_distribution"] = "gspmd"
     t0 = _tic(timings, "SpGEMM", t0, c_mat.cols)
     stats["overflow_C"] = int(ovf_c)
     stats["nnz_C"] = int(c_mat.nnz())

@@ -56,8 +56,12 @@ from .transitive_reduction import (  # noqa: F401
 from .summa import (  # noqa: F401
     DistEll,
     collect,
+    default_summa_mesh,
     dist_transitive_reduction,
+    dist_transitive_reduction_ring,
     distribute_ell,
+    distribute_ell_blocks,
+    overlap_spgemm_shard_map,
     summa_allgather,
     summa_ring,
 )

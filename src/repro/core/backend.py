@@ -53,6 +53,15 @@ Current ops
     XLA gather/scatter round trip per round, ``pallas`` fuses blocks of
     rounds into VMEM-resident kernel calls (``kernels/cc/``); labels agree
     bit-for-bit (``tests/test_components.py``).
+``spgemm_ring_stages``
+    ``(offsets, a_cols, a_vals, b_cols, b_vals, *, semiring, capacity,
+    n_cols_out, interpret) -> (st_cols, st_vals, overflow)`` — a batch of
+    ring-SUMMA local SpGEMM stages (DESIGN.md §2.11): ``reference`` runs the
+    gather → ⊗ → merge pipeline once per stage, ``pallas`` fuses the whole
+    batch into one grid program with the stage outputs VMEM-resident
+    (``kernels/spgemm/``); per-stage buffers agree bit-for-bit
+    (``tests/test_kernels.py``), and ``core.summa.summa_ring`` dispatches
+    between them.
 
 Distribution axis
 -----------------

@@ -29,6 +29,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 INF = jnp.inf
 # Number of shared k-mer position pairs kept per read pair ("for this work we
@@ -125,7 +126,9 @@ def mp_value(suffix_len, strand_i, strand_j) -> jnp.ndarray:
 # concatenates "as long as it is smaller than the number of positions to be
 # stored"); with a deterministic merge order this is associative.
 
-_NOPOS = jnp.int32(-1)
+# numpy scalar so overlap-semiring code stays Pallas-traceable (a jnp scalar
+# would be a captured constant inside kernel bodies, which pallas_call rejects)
+_NOPOS = np.int32(-1)
 
 
 def _ov_mul(a: Any, b: Any) -> Any:

@@ -24,10 +24,14 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .semiring import Semiring, tree_where
 
-NO_COL = jnp.int32(-1)
+# numpy scalar (not a jnp array) so code using it can be traced inside Pallas
+# kernel bodies — jax inlines numpy scalars as jaxpr literals where a device
+# array would be a captured constant, which pallas_call rejects.
+NO_COL = np.int32(-1)
 
 
 def next_pow2(x: int) -> int:
@@ -230,7 +234,7 @@ def merge_sorted_rows(
 
     The workhorse of the local SpGEMM.  Returns (cols, vals, overflow)."""
     n, q = cand_cols.shape
-    big = jnp.int32(2**30)
+    big = np.int32(2**30)  # numpy scalar: stays a literal under Pallas tracing
     key = jnp.where(cand_cols >= 0, cand_cols, big)
     order = jnp.argsort(key, axis=1)
     cs = jnp.take_along_axis(key, order, axis=1)
@@ -284,7 +288,7 @@ def prune(mat: EllMatrix, drop: jnp.ndarray, semiring: Semiring) -> EllMatrix:
     so they stay sorted-by-column (the paper's R ∘ ¬I, §IV-E)."""
     n, k = mat.cols.shape
     keep = mat.mask & ~drop
-    big = jnp.int32(2**30)
+    big = np.int32(2**30)
     key = jnp.where(keep, mat.cols, big)
     order = jnp.argsort(key, axis=1)
     new_raw = jnp.take_along_axis(key, order, axis=1)

@@ -1,0 +1,11 @@
+# Fused ring-SUMMA local SpGEMM stage kernel (DESIGN.md §2.11):
+#   ref.py    — jnp oracle (one HBM round trip per ring stage)
+#   spgemm.py — Pallas grid program fusing a stage batch in VMEM
+#   ops.py    — VMEM-budget fallback + backend-dispatch registration
+from .ops import (  # noqa: F401
+    VMEM_BUDGET_BYTES,
+    fused_path_fits,
+    hbm_round_trips,
+    spgemm_ring_stages_pallas,
+)
+from .ref import spgemm_ring_stages_ref  # noqa: F401

@@ -1,0 +1,94 @@
+"""jnp oracle for the ring-SUMMA local SpGEMM stage batch (``spgemm_ring_stages``).
+
+One ring-SUMMA stage multiplies a local A panel (rebased into the current
+B row-block's index range) by the local B panel and compacts the result to a
+``capacity``-slot ELL buffer — exactly ``core.spgemm.spgemm`` on the rebased
+panel.  The op batches ``S`` consecutive stages: the reference runs them as
+``S`` separate multiplies (one HBM round trip per stage for the stage
+buffers), the Pallas backend fuses them into one VMEM-resident grid program
+(``spgemm.py``).
+
+The per-stage buffers are kept *separate* (stage axis leading) rather than
+⊕-merged into a running accumulator: the overlap semiring's position-pair ⊕
+is order-dependent (first ``NUM_POS_PAIRS`` pairs win), so the caller
+(``core.summa.summa_ring``) reorders the buffers into canonical k-block
+order before the single final merge — that makes the distributed product
+bit-identical to the local ``spgemm``, which combines candidates in
+ascending k order.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ...core.semiring import Semiring
+from ...core.spgemm import spgemm
+from ...core.spmat import EllMatrix, NO_COL
+
+
+def _rebase_panel(a_cols: jnp.ndarray, off, nb: int) -> jnp.ndarray:
+    """Rebase global A column ids into the B row-block ``[off, off+nb)``;
+    out-of-block slots become empty (they belong to other ring stages)."""
+    rebased = a_cols - off
+    in_range = (a_cols >= 0) & (rebased >= 0) & (rebased < nb)
+    return jnp.where(in_range, rebased, NO_COL)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("semiring", "capacity", "n_cols_out", "interpret"),
+)
+def spgemm_ring_stages_ref(
+    offsets: jnp.ndarray,
+    a_cols: jnp.ndarray,
+    a_vals,
+    b_cols: jnp.ndarray,
+    b_vals,
+    *,
+    semiring: Semiring,
+    capacity: int,
+    n_cols_out: int,
+    interpret: bool | str = "auto",
+):
+    """Reference backend of ``spgemm_ring_stages``.
+
+    Args:
+      offsets: ``(S,)`` int32 — per-stage B row-block offset (A ids are
+        rebased by it before the multiply).
+      a_cols: ``(S, n, K_A)`` int32 stacked A panels (global column ids).
+      a_vals: value pytree, leaves ``(S, n, K_A, ...)``.
+      b_cols: ``(S, nb, K_B)`` int32 stacked B panels (output column ids).
+      b_vals: value pytree, leaves ``(S, nb, K_B, ...)``.
+      semiring / capacity / n_cols_out: the local-multiply contract of
+        ``core.spgemm.spgemm``.
+      interpret: accepted for signature parity with the Pallas backend;
+        unused (the oracle is plain jnp).
+
+    Returns:
+      ``(st_cols, st_vals, overflow)`` — per-stage ELL buffers ``(S, n,
+      capacity)`` (cols int32, vals pytree) and the summed overflow count.
+    """
+    del interpret
+    stages, _, _ = a_cols.shape
+    nb = b_cols.shape[1]
+    st_cols, st_vals, ovf = [], [], jnp.int32(0)
+    for s in range(stages):
+        ac = _rebase_panel(a_cols[s], offsets[s], nb)
+        a_loc = EllMatrix(
+            cols=ac, vals=jax.tree.map(lambda v: v[s], a_vals), n_cols=nb
+        )
+        b_loc = EllMatrix(
+            cols=b_cols[s],
+            vals=jax.tree.map(lambda v: v[s], b_vals),
+            n_cols=n_cols_out,
+        )
+        c, so = spgemm(a_loc, b_loc, semiring=semiring, capacity=capacity)
+        st_cols.append(c.cols)
+        st_vals.append(c.vals)
+        ovf = ovf + so
+    out_cols = jnp.stack(st_cols)
+    out_vals = jax.tree.map(lambda *xs: jnp.stack(xs), *st_vals)
+    return out_cols, out_vals, ovf

@@ -49,8 +49,10 @@ print("OK")
 def test_summa_ring_matches_local():
     run_with_devices(SETUP + """
 Cr, _ = spgemm(R, R, semiring=SR, capacity=32)
-Cd, _ = summa_ring(Rd, Rd, semiring=SR, out_block_capacity=16)
+Cd, _, st = summa_ring(Rd, Rd, semiring=SR, out_block_capacity=16)
 assert graphs_equal(from_ell(collect(Cd)), from_ell(Cr))
+assert st["summa_algorithm"] == "ring"
+assert st["exchange_words_summa"] > 0
 print("OK")
 """)
 

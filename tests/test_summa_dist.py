@@ -1,0 +1,265 @@
+"""Explicit-exchange ring SUMMA (DESIGN.md §2.11): golden parity of the ring
+vs the all-gather variant vs the local SpGEMM — bit-identical ELL output and
+overflow counts — plus the exchange-accounting contract (measured words equal
+the analytic ``words_summa`` model exactly; present-and-zero on paths without
+explicit exchanges) and the loud non-square / multi-row-axis fallback."""
+
+import os
+
+import pytest
+
+from _dist_helpers import run_with_devices
+
+pytestmark = pytest.mark.dist  # deselect quickly with -m "not dist"
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+SETUP = f"""
+import sys
+sys.path.insert(0, {_ROOT!r})
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.semiring import (
+    minplus_orient_semiring as SR, overlap_semiring)
+from repro.assembly.counter import first_semiring
+from repro.core.spmat import ell_equal, from_coo
+from repro.core.spgemm import spgemm
+from repro.core.summa import (
+    collect, distribute_ell, distribute_ell_blocks, overlap_spgemm_shard_map,
+    summa_allgather, summa_ring,
+)
+from repro.launch.mesh import make_test_mesh
+from benchmarks.bench_comm_model import words_summa
+
+def mpsr_mat(n, m, cap, e, seed):
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, n, e); cols = rng.integers(0, m, e)
+    ok = np.ones(e, bool)
+    combos = rng.integers(0, 4, e)
+    suf = rng.integers(1, 100, e).astype(np.float32)
+    vals = np.full((e, 4), np.inf, np.float32)
+    vals[np.arange(e), combos] = suf
+    args = tuple(map(jnp.asarray, (rows, cols, vals, ok)))
+    mat, _ = from_coo(*args, n_rows=n, n_cols=m, capacity=cap, semiring=SR)
+    return mat, args
+
+def pos_mat(rows, cols, n, m, cap, seed):
+    rng = np.random.default_rng(seed)
+    vals = {{"pos": jnp.asarray(rng.integers(0, 60, len(rows)), jnp.int32)}}
+    ok = jnp.ones(len(rows), bool)
+    mat, ovf = from_coo(jnp.asarray(rows), jnp.asarray(cols), vals, ok,
+                        n_rows=n, n_cols=m, capacity=cap,
+                        semiring=first_semiring)
+    assert int(ovf) == 0
+    return mat
+"""
+
+
+def test_ring_allgather_local_parity_2x2_exact_words():
+    """2×2 grid, MinPlus semiring: the three paths agree bit-for-bit (cols,
+    vals, overflow), the ring's measured exchange words equal the analytic
+    model exactly, and the stat keys carry the round-trip evidence."""
+    run_with_devices(SETUP + """
+mesh = make_test_mesh((2, 2))
+n = 16
+R, args = mpsr_mat(n, n, 8, 60, 0)
+Rd, ovfd = distribute_ell(*args, n_rows=n, n_cols=n, block_capacity=8,
+                          semiring=SR, mesh=mesh)
+assert int(ovfd) == 0
+
+C_ag, ovf_ag = summa_allgather(Rd, Rd, semiring=SR, out_block_capacity=16)
+C_rg, ovf_rg, st = summa_ring(Rd, Rd, semiring=SR, out_block_capacity=16)
+assert ell_equal(collect(C_ag), collect(C_rg))
+assert int(ovf_ag) == int(ovf_rg)
+
+# host-level parity against the local product (collect + canonical merge)
+C_host, ovf_host, st2 = overlap_spgemm_shard_map(
+    R, R, semiring=SR, operand_semiring=SR, capacity=16, mesh=mesh)
+C_loc, ovf_loc = spgemm(R, R, semiring=SR, capacity=16)
+assert ell_equal(C_host, C_loc)
+assert int(ovf_host) == int(ovf_loc)
+
+# measured == model, exactly (5 words/slot: col id + (4,) f32 suffixes)
+assert st["summa_algorithm"] == "ring"
+assert st["summa_stages"] == 2
+assert st["exchange_rounds_summa"] == 1
+assert st["exchange_words_summa"] == words_summa(
+    n_rows=n, a_block_slots=8, a_words_per_slot=5,
+    m_rows=n, b_block_slots=8, b_words_per_slot=5, pr=2, pc=2)
+assert st["spgemm_hbm_round_trips_reference"] == 2
+assert st["spgemm_hbm_round_trips"] <= 2
+print("OK", st["exchange_words_summa"])
+""")
+
+
+def test_overlap_semiring_parity_with_padding_and_shared_kmers():
+    """Overlap semiring (order-dependent ⊕) with read pairs sharing > 2
+    k-mers — the canonical k-order reorder is what keeps the position pairs
+    bit-identical — on an odd read count (exercises the row padding)."""
+    run_with_devices(SETUP + """
+mesh = make_test_mesh((2, 2))
+n_reads, m = 15, 32  # odd reads: pad-to-multiple-of-pr path
+rng = np.random.default_rng(5)
+rows = list(rng.integers(0, n_reads, 50))
+cols = list(rng.integers(0, m, 50))
+# force pairs with >2 shared k-mers (cnt beyond NUM_POS_PAIRS): reads 1 and 2
+# share k-mers 3,4,5,6 — the kept pair subset depends on merge order
+for km in (3, 4, 5, 6):
+    rows += [1, 2]; cols += [km, km]
+A = pos_mat(np.array(rows), np.array(cols), n_reads, m, 12, 1)
+At = pos_mat(np.array(cols), np.array(rows), m, n_reads, 12, 2)
+
+C_loc, ovf_loc = spgemm(A, At, semiring=overlap_semiring, capacity=16)
+C_dist, ovf_dist, st = overlap_spgemm_shard_map(
+    A, At, semiring=overlap_semiring, operand_semiring=first_semiring,
+    capacity=16, mesh=mesh)
+assert ell_equal(C_dist, C_loc)
+assert int(ovf_dist) == int(ovf_loc)
+assert int(C_loc.vals["cnt"].max()) > 2  # the >NUM_POS_PAIRS case is live
+assert st["summa_algorithm"] == "ring"
+# measured == model on the padded row count (16 = 15 padded to pr=2)
+assert st["exchange_words_summa"] == words_summa(
+    n_rows=16, a_block_slots=12, a_words_per_slot=2,
+    m_rows=32, b_block_slots=12, b_words_per_slot=2, pr=2, pc=2)
+print("OK", int(C_loc.vals["cnt"].max()))
+""")
+
+
+def test_odd_block_capacity():
+    """Odd (non-power-of-two) block capacities through distribution, ring and
+    merge — no alignment assumption anywhere in the path."""
+    run_with_devices(SETUP + """
+mesh = make_test_mesh((2, 2))
+n = 16
+R, args = mpsr_mat(n, n, 7, 70, 3)  # odd operand capacity
+Rd, _ = distribute_ell(*args, n_rows=n, n_cols=n, block_capacity=7,
+                       semiring=SR, mesh=mesh)
+C_ag, ovf_ag = summa_allgather(Rd, Rd, semiring=SR, out_block_capacity=13)
+C_rg, ovf_rg, st = summa_ring(Rd, Rd, semiring=SR, out_block_capacity=13)
+assert ell_equal(collect(C_ag), collect(C_rg))
+assert int(ovf_ag) == int(ovf_rg)
+assert st["exchange_words_summa"] == words_summa(
+    n_rows=n, a_block_slots=7, a_words_per_slot=5,
+    m_rows=n, b_block_slots=7, b_words_per_slot=5, pr=2, pc=2)
+print("OK")
+""")
+
+
+def test_non_square_grid_falls_back_loudly():
+    """(4,1) and (1,4) grids cannot form the Cannon ring: the result must
+    still be correct (routed through summa_allgather), the stats must record
+    the fallback + reason, the exchange stats must be present-and-zero, and
+    strict=True must raise instead."""
+    run_with_devices(SETUP + """
+n = 16
+R, args = mpsr_mat(n, n, 8, 60, 0)
+C_loc, _ = spgemm(R, R, semiring=SR, capacity=16)
+for shape in ((4, 1), (1, 4)):
+    mesh = make_test_mesh(shape)
+    Rd, _ = distribute_ell(*args, n_rows=n, n_cols=n, block_capacity=8,
+                           semiring=SR, mesh=mesh)
+    Cd, ovf, st = summa_ring(Rd, Rd, semiring=SR, out_block_capacity=16)
+    assert st["summa_algorithm"] == "allgather_fallback"
+    assert "non-square" in st["summa_fallback_reason"]
+    assert st["exchange_words_summa"] == 0
+    assert st["exchange_rounds_summa"] == 0
+    g = collect(Cd)
+    from repro.core.myers_baseline import from_ell, graphs_equal
+    assert graphs_equal(from_ell(g), from_ell(C_loc))
+    try:
+        summa_ring(Rd, Rd, semiring=SR, out_block_capacity=16, strict=True)
+        raise AssertionError("strict=True should have raised")
+    except ValueError as e:
+        assert "square" in str(e)
+print("OK")
+""")
+
+
+def test_multipod_mesh_ring_and_fallback():
+    """(pod, data, model) mesh: row_axes=("data",) leaves a square 2×2
+    subgrid — the ring runs; row_axes=("pod", "data") is a multi-axis grid —
+    the recorded all-gather fallback routes, same results either way."""
+    run_with_devices(SETUP + """
+mesh = make_test_mesh((2, 2, 2), ("pod", "data", "model"))
+n = 16
+R, args = mpsr_mat(n, n, 8, 50, 1)
+C_loc, _ = spgemm(R, R, semiring=SR, capacity=16)
+from repro.core.myers_baseline import from_ell, graphs_equal
+
+Rd_sq, _ = distribute_ell(*args, n_rows=n, n_cols=n, block_capacity=8,
+                          semiring=SR, mesh=mesh, row_axes=("data",))
+C_sq, _, st_sq = summa_ring(Rd_sq, Rd_sq, semiring=SR, out_block_capacity=16)
+assert st_sq["summa_algorithm"] == "ring"
+assert st_sq["exchange_words_summa"] == words_summa(
+    n_rows=n, a_block_slots=8, a_words_per_slot=5,
+    m_rows=n, b_block_slots=8, b_words_per_slot=5, pr=2, pc=2)
+assert graphs_equal(from_ell(collect(C_sq)), from_ell(C_loc))
+
+Rd_mp, _ = distribute_ell(*args, n_rows=n, n_cols=n, block_capacity=8,
+                          semiring=SR, mesh=mesh, row_axes=("pod", "data"))
+C_mp, _, st_mp = summa_ring(Rd_mp, Rd_mp, semiring=SR, out_block_capacity=16)
+assert st_mp["summa_algorithm"] == "allgather_fallback"
+assert "multi-axis" in st_mp["summa_fallback_reason"]
+assert st_mp["exchange_words_summa"] == 0
+assert graphs_equal(from_ell(collect(C_mp)), from_ell(C_loc))
+print("OK")
+""", n_devices=8)
+
+
+def test_distribute_ell_blocks_roundtrip_and_overflow():
+    """The semiring-free block distribution: bit-identical to the COO-based
+    distribute_ell on the same matrix, and the overflow counter fires when
+    block_capacity is too small for one (row, block)."""
+    run_with_devices(SETUP + """
+mesh = make_test_mesh((2, 2))
+n = 16
+R, args = mpsr_mat(n, n, 8, 60, 0)
+Rd_coo, _ = distribute_ell(*args, n_rows=n, n_cols=n, block_capacity=8,
+                           semiring=SR, mesh=mesh)
+Rd_blk, ovf = distribute_ell_blocks(R, block_capacity=8, semiring=SR,
+                                    mesh=mesh)
+assert int(ovf) == 0
+assert ell_equal(collect(Rd_coo), collect(Rd_blk))
+# tight capacity: must surface (not drop silently) the spill
+_, ovf_tight = distribute_ell_blocks(R, block_capacity=1, semiring=SR,
+                                     mesh=mesh)
+assert int(ovf_tight) > 0
+# indivisible rows fail loudly
+try:
+    bad, _ = mpsr_mat(15, n, 8, 40, 9)
+    distribute_ell_blocks(bad, block_capacity=8, semiring=SR, mesh=mesh)
+    raise AssertionError("should have raised on 15 rows / pr=2")
+except ValueError as e:
+    assert "divisible" in str(e)
+print("OK")
+""")
+
+
+def test_dist_tr_ring_matches_allgather_and_local():
+    """Transitive reduction with the N = R² square on the ring: same S graph
+    as the all-gather variant and the local Algorithm 2, with live exchange
+    accounting accumulated across iterations."""
+    run_with_devices(SETUP + """
+from repro.core.summa import (
+    dist_transitive_reduction, dist_transitive_reduction_ring)
+from repro.core.transitive_reduction import transitive_reduction
+from repro.core.myers_baseline import from_ell, graphs_equal
+
+mesh = make_test_mesh((2, 2))
+n = 16
+R, args = mpsr_mat(n, n, 8, 60, 0)
+Rd, _ = distribute_ell(*args, n_rows=n, n_cols=n, block_capacity=8,
+                       semiring=SR, mesh=mesh)
+S, _ = transitive_reduction(R, fuzz=50.0, n_capacity=64)
+Sd_ag, it_ag, nnz_ag = dist_transitive_reduction(Rd, fuzz=50.0)
+Sd_rg, it_rg, nnz_rg, st = dist_transitive_reduction_ring(Rd, fuzz=50.0)
+assert graphs_equal(from_ell(collect(Sd_rg)), from_ell(S))
+assert graphs_equal(from_ell(collect(Sd_rg)), from_ell(collect(Sd_ag)))
+assert int(nnz_rg) == int(nnz_ag) == int(S.nnz())
+assert st["summa_algorithm"] == "ring"
+assert st["exchange_rounds_summa"] == it_rg  # one rotation per pass on 2x2
+assert st["exchange_words_summa"] > 0
+# the summa= knob on the public entry point routes to the same result
+Sd_kn, it_kn, nnz_kn = dist_transitive_reduction(Rd, fuzz=50.0, summa="ring")
+assert graphs_equal(from_ell(collect(Sd_kn)), from_ell(collect(Sd_rg)))
+print("OK", int(it_rg), st["exchange_words_summa"])
+""")
