@@ -1,0 +1,37 @@
+"""Shared benchmark timing: one untimed warmup + timed steady-state reps.
+
+Every snapshot benchmark used to fold the first (compiling) call into its
+reported wall-clock, which made compile-dominated rows — e.g. a per-call
+``jax.jit`` rebuild — indistinguishable from genuinely slow steady state.
+:func:`timed` separates the two: the first call is measured on its own
+(``compile_us``: XLA compile + one execution), then ``reps`` further calls
+are averaged for the steady-state figure.  ``benchmarks/run.py`` carries the
+pair into the JSON records as ``ms`` / ``compile_ms``, and
+``scripts/check_bench_regression.py`` refuses to ratio-compare against
+baseline rows that predate the split (no ``compile_ms`` field).
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def timed(f, out_of=lambda r: r, reps: int = 3):
+    """Time ``f``: returns ``(result, steady_us, compile_us)``.
+
+    ``out_of`` selects what to device-sync from ``f``'s result (any pytree,
+    dataclasses included — synced via :func:`repro.obs.sync`, the same
+    block-until-ready path the pipeline's stage spans use).  ``compile_us``
+    is the wall-clock of the first call (compile + one execution);
+    ``steady_us`` averages ``reps`` subsequent calls."""
+    from repro.obs import sync
+
+    t0 = time.perf_counter()
+    res = f()
+    sync(out_of(res))
+    compile_us = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        sync(out_of(f()))
+    steady_us = (time.perf_counter() - t0) / reps * 1e6
+    return res, steady_us, compile_us

@@ -20,6 +20,31 @@ from __future__ import annotations
 import numpy as np
 
 
+def render_span_tree(tracer, max_depth: int = 4) -> str:
+    """Render an ``obs.Tracer``'s span forest as an indented text tree.
+
+    One line per span — ``name [attrs] ms`` — children indented under their
+    parent, depth-capped at ``max_depth``.  This is the human-readable twin
+    of the Chrome trace export (``obs.write_chrome_trace``): the breakdown
+    benchmark prints it so a ``--trace`` run shows the stage → shard_map
+    phase → kernel-launch nesting without opening Perfetto."""
+    lines = []
+
+    def _fmt(sp, depth):
+        if depth > max_depth:
+            return
+        attrs = {k: v for k, v in sp.attrs.items() if k != "kind"}
+        att = (" [" + ", ".join(f"{k}={v}" for k, v in attrs.items()) + "]"
+               if attrs else "")
+        lines.append(f"{'  ' * depth}{sp.name}{att} {sp.duration_ms:.2f}ms")
+        for child in sp.children:
+            _fmt(child, depth + 1)
+
+    for root in tracer.roots:
+        _fmt(root, 0)
+    return "\n".join(lines)
+
+
 def run(backends=("reference", "pallas"), distributions=("gspmd",)):
     from repro.assembly.pipeline import PipelineConfig, assemble
     from repro.assembly.simulate import simulate_genome, simulate_reads
@@ -116,6 +141,9 @@ def main() -> None:
                    choices=["reference", "pallas", "both"])
     p.add_argument("--distribution", default="gspmd",
                    choices=["gspmd", "shard_map", "both"])
+    p.add_argument("--trace", action="store_true",
+                   help="run one traced pipeline and print its span tree "
+                        "(stage -> phase -> kernel) to stderr")
     ns = p.parse_args()
     backends = (("reference", "pallas") if ns.backend == "both"
                 else (ns.backend,))
@@ -124,6 +152,23 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, us, derived in run(backends=backends, distributions=dists):
         print(f"{name},{us:.1f},{derived}", flush=True)
+    if ns.trace:
+        import sys
+
+        from repro.assembly.pipeline import PipelineConfig, assemble
+        from repro.assembly.simulate import simulate_genome, simulate_reads
+
+        rng = np.random.default_rng(9)
+        g = simulate_genome(rng, 10_000)
+        rs = simulate_reads(g, depth=12, mean_len=900, std_len=120,
+                            error_rate=0.03, seed=10)
+        cfg = PipelineConfig(m_capacity=1 << 16, upper=48, read_capacity=128,
+                             overlap_capacity=48, r_capacity=32, band=33,
+                             max_steps=2048, align_chunk=8192,
+                             backend="pallas", distribution="shard_map",
+                             trace=True)
+        res = assemble(rs.codes, rs.lengths, cfg)
+        print(render_span_tree(res.trace), file=sys.stderr)
 
 
 if __name__ == "__main__":

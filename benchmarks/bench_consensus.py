@@ -12,14 +12,12 @@ Standalone: ``python -m benchmarks.bench_consensus --backend pallas``.
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
+
+from ._timing import timed
 
 
 def run(backends=("reference", "pallas"), sweep=(256, 1024, 4096)):
-    import jax
-
     from repro.assembly.consensus import polish_contig_set
     from repro.assembly.contig_gen import (
         consistent_chain_graph, generate_contigs,
@@ -38,12 +36,7 @@ def run(backends=("reference", "pallas"), sweep=(256, 1024, 4096)):
                     cset, codes, lengths, backend=backend, min_depth=2
                 )
 
-            cres = f()  # warm-up / compile
-            reps = 3
-            t0 = time.perf_counter()
-            for _ in range(reps):
-                jax.block_until_ready(f().codes)
-            us = (time.perf_counter() - t0) / reps * 1e6
+            cres, us, cus = timed(f, out_of=lambda r: r.codes)
             if backend == "reference":
                 base = us
             derived = (
@@ -53,7 +46,7 @@ def run(backends=("reference", "pallas"), sweep=(256, 1024, 4096)):
             )
             if base is not None and backend != "reference":
                 derived += f";speedup_vs_reference={base / us:.1f}x"
-            rows.append((f"consensus[{backend}]/n{n}", us, derived))
+            rows.append((f"consensus[{backend}]/n{n}", us, derived, cus))
     return rows
 
 
@@ -67,7 +60,7 @@ def main() -> None:
     backends = (("reference", "pallas") if ns.backend == "both"
                 else (ns.backend,))
     print("name,us_per_call,derived")
-    for name, us, derived in run(backends=backends):
+    for name, us, derived, *_ in run(backends=backends):
         print(f"{name},{us:.1f},{derived}", flush=True)
 
 

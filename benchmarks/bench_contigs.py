@@ -25,9 +25,9 @@ Standalone: ``python -m benchmarks.bench_contigs --backend pallas
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
+
+from ._timing import timed
 
 
 def _string_graph(n, seed):
@@ -52,18 +52,6 @@ def _string_graph(n, seed):
     return string_matrix_from_edges(n, edges, capacity=8)
 
 
-def _time(f, out_of):
-    """Wall-clock one warm-up + 3 timed reps of ``f``; sync via ``out_of``."""
-    import jax
-
-    res = f()  # warm-up / compile
-    reps = 3
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        jax.block_until_ready(jax.tree.leaves(out_of(f())))
-    return res, (time.perf_counter() - t0) / reps * 1e6
-
-
 def run(backends=("reference", "pallas"), sweep=(256, 1024, 4096),
         distributions=("gspmd",)):
     from repro.assembly.contig_gen import generate_contigs
@@ -84,7 +72,7 @@ def run(backends=("reference", "pallas"), sweep=(256, 1024, 4096),
         for backend in backends:
             dists = distributions if backend != "reference" else ("gspmd",)
             for dist in dists:
-                cset, us = _time(
+                cset, us, cus = timed(
                     lambda: generate_contigs(
                         s, codes, lengths, backend=backend,
                         distribution=dist, mesh=mesh,
@@ -112,7 +100,7 @@ def run(backends=("reference", "pallas"), sweep=(256, 1024, 4096),
                         f";model_words_sort={model_sort}"
                     )
                 tag = backend if dist == "gspmd" else f"{backend}/{dist}"
-                rows.append((f"contigs[{tag}]/n{n}", us, derived))
+                rows.append((f"contigs[{tag}]/n{n}", us, derived, cus))
 
         # fused cc kernel vs oracle on the same state graph.  The pallas
         # backend falls back to the oracle above its VMEM budget — then its
@@ -120,7 +108,7 @@ def run(backends=("reference", "pallas"), sweep=(256, 1024, 4096),
         g = expand_states(s)
         fused = bool(fused_path_fits(g.cols))
         for backend in backends:
-            (labels, iters), us = _time(
+            (labels, iters), us, cus = timed(
                 lambda: connected_components(g, backend=backend),
                 out_of=lambda r: r[0],
             )
@@ -132,6 +120,7 @@ def run(backends=("reference", "pallas"), sweep=(256, 1024, 4096),
                 f"cc[{backend}]/n{n}", us,
                 f"iters={int(iters)};hbm_round_trips={trips}"
                 + ("" if backend == "reference" else f";fused={fused}"),
+                cus,
             ))
     return rows
 
@@ -151,7 +140,7 @@ def main() -> None:
     dists = (("gspmd", "shard_map") if ns.distribution == "both"
              else (ns.distribution,))
     print("name,us_per_call,derived")
-    for name, us, derived in run(backends=backends, distributions=dists):
+    for name, us, derived, *_ in run(backends=backends, distributions=dists):
         print(f"{name},{us:.1f},{derived}", flush=True)
 
 

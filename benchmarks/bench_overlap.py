@@ -15,11 +15,11 @@ field — ``scripts/check_smoke_comm.py`` asserts they match exactly."""
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
 import jax
 import jax.numpy as jnp
+
+from ._timing import timed
 
 
 def _inputs(genome=10_000):
@@ -83,14 +83,9 @@ def _ring_rows(a, at, n_reads, cap):
         c, ovf, st = overlap_spgemm_shard_map(
             a, at, semiring=OV, operand_semiring=first_semiring,
             capacity=cap, mesh=mesh)
-        c.cols.block_until_ready()
         return c, st
 
-    c, st = call()  # warm-up (includes compile)
-    t0 = time.perf_counter()
-    for _ in range(3):
-        c, st = call()
-    t_ring = (time.perf_counter() - t0) / 3 * 1e6
+    (c, st), t_ring, t_compile = timed(call, out_of=lambda r: r[0].cols)
 
     n_pad = -(-n_reads // pr) * pr
     m_rows = at.cols.shape[0]
@@ -106,7 +101,8 @@ def _ring_rows(a, at, n_reads, cap):
                f";summa_algorithm={st['summa_algorithm']}"
                f";hbm_round_trips={st.get('spgemm_hbm_round_trips', 0)}"
                f";nnzC={int(c.nnz())}")
-    return [(f"overlap[shard_map]/ring_{pr}x{pc}", t_ring, derived)]
+    return [(f"overlap[shard_map]/ring_{pr}x{pc}", t_ring, derived,
+             t_compile)]
 
 
 def run(distributions=("local",), genome=10_000):
@@ -123,22 +119,10 @@ def run(distributions=("local",), genome=10_000):
         return rows
 
     f2d = jax.jit(lambda: spgemm(a, at, semiring=OV, capacity=64))
-    c2d, _ = f2d()
-    jax.block_until_ready(c2d.cols)
-    t0 = time.perf_counter()
-    for _ in range(3):
-        c, _ = f2d()
-        c.cols.block_until_ready()
-    t_2d = (time.perf_counter() - t0) / 3 * 1e6
+    (c2d, _), t_2d, c_2d = timed(f2d, out_of=lambda r: r[0].cols)
 
     f1d = jax.jit(lambda: _outer_product_1d(at, n, 64))
-    c1d = f1d()
-    jax.block_until_ready(c1d.cols)
-    t0 = time.perf_counter()
-    for _ in range(3):
-        c = f1d()
-        c.cols.block_until_ready()
-    t_1d = (time.perf_counter() - t0) / 3 * 1e6
+    c1d, t_1d, c_1d = timed(f1d, out_of=lambda r: r.cols)
 
     # same candidate pairs?
     same = int(jnp.sum((c2d.cols >= 0) != (c1d.cols >= 0)))
@@ -149,10 +133,10 @@ def run(distributions=("local",), genome=10_000):
     w1d = (am / m_real) * am / p if m_real else 0
     w2d = am / (p ** 0.5)
     rows += [
-        ("overlap/2d_spgemm", t_2d, f"nnzC={int(c2d.nnz())}"),
+        ("overlap/2d_spgemm", t_2d, f"nnzC={int(c2d.nnz())}", c_2d),
         ("overlap/1d_outer_product", t_1d,
-         f"pattern_mismatches={same};speedup_2d={t_1d / t_2d:.2f}x"),
+         f"pattern_mismatches={same};speedup_2d={t_1d / t_2d:.2f}x", c_1d),
         ("overlap/model_words_P1024", 0.0,
-         f"W1D={w1d:.3e};W2D={w2d:.3e}"),
+         f"W1D={w1d:.3e};W2D={w2d:.3e}", 0.0),
     ]
     return rows

@@ -2,8 +2,12 @@
 
 Prints ``name,us_per_call,derived`` CSV (per the harness contract) and, with
 ``--json PATH``, also emits machine-readable per-benchmark records
-``{name, op, backend, shape, ms, derived}`` so the perf trajectory can be
-tracked across commits (CI uploads a smoke-size artifact per run).
+``{name, op, backend, shape, ms, compile_ms, derived}`` so the perf
+trajectory can be tracked across commits (CI uploads a smoke-size artifact
+per run).  ``ms`` is steady-state wall-clock (post-warmup average,
+``benchmarks/_timing.timed``); ``compile_ms`` is the separately measured
+first call (compile + one execution) — rows from modules that have not
+adopted the split omit the field.
 
 ``--snapshot`` is the committed-artifact mode: it implies ``--smoke``,
 restricts to the snapshot module set (``_SNAPSHOT_ONLY``), and writes
@@ -11,8 +15,15 @@ restricts to the snapshot module set (``_SNAPSHOT_ONLY``), and writes
 the record format).  ``scripts/check_bench_regression.py`` diffs a fresh
 snapshot against the committed one.
 
+``--trace-dir DIR`` additionally runs one small traced pipeline
+(``PipelineConfig.trace=True``, shard_map distribution) and writes the
+Chrome-trace JSON to ``DIR/assemble_trace.json`` — open it in Perfetto /
+``chrome://tracing``, or let ``scripts/check_trace.py`` assert its stage →
+phase nesting (the CI smoke job uploads it as an artifact).
+
     python -m benchmarks.run [--only contigs,consensus] [--smoke]
                              [--json BENCH.json] [--snapshot]
+                             [--trace-dir DIR]
 """
 
 import argparse
@@ -44,7 +55,7 @@ _SNAPSHOT_ONLY = ("contigs", "consensus", "overlap")
 
 # committed snapshot artifact for this PR sequence (bumped per perf PR)
 _SNAPSHOT_PATH = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "BENCH_6.json")
+    os.path.abspath(__file__))), "BENCH_7.json")
 
 
 def _modules():
@@ -67,9 +78,9 @@ def _modules():
     ]
 
 
-def _record(name, us, derived):
+def _record(name, us, derived, compile_us=None):
     m = _NAME_RE.match(name)
-    return {
+    rec = {
         "name": name,
         "op": m.group("op") if m else name,
         "backend": m.group("backend") if m else None,
@@ -77,6 +88,46 @@ def _record(name, us, derived):
         "ms": us / 1e3,
         "derived": str(derived),
     }
+    if compile_us is not None:
+        rec["compile_ms"] = compile_us / 1e3
+    return rec
+
+
+def _write_trace(trace_dir: str) -> str:
+    """Run one small traced pipeline and export its Chrome trace.
+
+    Uses the shard_map distribution so the trace exercises the explicit-
+    exchange phases (ring SUMMA stages, contig chain stage) — the nesting
+    ``scripts/check_trace.py`` asserts.  Prints the span tree to stderr
+    (``bench_breakdown.render_span_tree``) and returns the JSON path."""
+    import numpy as np
+
+    from repro.assembly.pipeline import PipelineConfig, assemble
+    from repro.assembly.simulate import simulate_genome, simulate_reads
+    from repro.obs import write_chrome_trace
+
+    from .bench_breakdown import render_span_tree
+
+    rng = np.random.default_rng(9)
+    g = simulate_genome(rng, 4_000)
+    rs = simulate_reads(g, depth=10, mean_len=600, std_len=80,
+                        error_rate=0.03, seed=10)
+    # backend="pallas" is load-bearing: "auto" resolves to the reference
+    # backend off-TPU, whose contig path is the host walk — no shard_map
+    # chain stage, so the cut/doubling/sort phase spans check_trace.py
+    # asserts would never be traced
+    cfg = PipelineConfig(m_capacity=1 << 16, upper=48, read_capacity=128,
+                         overlap_capacity=48, r_capacity=32, band=33,
+                         max_steps=2048, align_chunk=8192,
+                         backend="pallas", distribution="shard_map",
+                         trace=True)
+    res = assemble(rs.codes, rs.lengths, cfg)
+    os.makedirs(trace_dir, exist_ok=True)
+    path = os.path.join(trace_dir, "assemble_trace.json")
+    write_chrome_trace(res.trace, path)
+    print(render_span_tree(res.trace), file=sys.stderr)
+    print(f"# wrote Chrome trace to {path}", file=sys.stderr)
+    return path
 
 
 def main(argv=None) -> None:
@@ -91,6 +142,9 @@ def main(argv=None) -> None:
                     help="write the committed smoke snapshot "
                          f"({os.path.basename(_SNAPSHOT_PATH)}); implies "
                          "--smoke and restricts to " + ",".join(_SNAPSHOT_ONLY))
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="also run one traced pipeline and write its Chrome "
+                         "trace JSON to DIR/assemble_trace.json")
     ns = ap.parse_args(argv)
     if ns.snapshot:
         ns.smoke = True
@@ -120,13 +174,18 @@ def main(argv=None) -> None:
                 kwargs = {k: v for k, v in _SMOKE.get(key, {}).items()
                           if k in accepted}
             try:
-                for name, us, derived in mod.run(**kwargs):
+                for name, us, derived, *extra in mod.run(**kwargs):
                     print(f"{name},{us:.1f},{derived}", flush=True)
-                    records.append(_record(name, us, derived))
+                    records.append(_record(
+                        name, us, derived,
+                        compile_us=extra[0] if extra else None,
+                    ))
             except Exception as exc:  # pragma: no cover
                 print(f"{label}/ERROR,nan,{type(exc).__name__}:{exc}",
                       flush=True)
                 raise
+        if ns.trace_dir:
+            _write_trace(ns.trace_dir)
     finally:
         # keep the partial trajectory even when a late module dies
         if ns.json:

@@ -12,13 +12,19 @@ exceeds ``RATIO``× the *best* previous measurement of that row — a deliberate
 threshold far above runner noise, so only gross slowdowns (an accidental
 de-jit, a dropped fused path) fail CI while normal jitter passes.
 
-Rows present only on one side are reported informationally and never fail:
-the benchmark set is expected to grow per PR, and a renamed row should not
-block the PR that renames it.  With no previous snapshots at all the script
-succeeds immediately (first PR in the trajectory).
+Coverage is part of the contract: a baseline row that is *missing* from the
+fresh snapshot fails with a per-row message (a silently dropped benchmark
+must not read as "no regression").  Rows only in the fresh snapshot stay
+informational — the set is expected to grow per PR.
 
-Exit status: 0 = no gross regression, 1 = at least one row regressed,
-2 = usage error.
+Baselines that predate the warmup/steady-state split (records without a
+``compile_ms`` field — their ``ms`` folds XLA compile into wall-clock) are
+*skipped with a notice* instead of ratio-compared: a steady-state fresh
+measurement against a compile-dominated baseline would pass trivially and
+mask real regressions behind a meaningless headroom.
+
+Exit status: 0 = no gross regression and full coverage, 1 = a row regressed
+or disappeared, 2 = usage error.
 """
 
 from __future__ import annotations
@@ -35,20 +41,32 @@ MIN_MS = 1.0
 
 
 def _load(path: str) -> dict:
-    """Map ``name`` -> ``ms`` for one snapshot file."""
+    """Map ``name`` -> ``(ms, has_compile_split)`` for one snapshot file."""
     with open(path) as f:
         records = json.load(f)
-    return {r["name"]: float(r["ms"]) for r in records if "name" in r}
+    return {r["name"]: (float(r["ms"]), "compile_ms" in r)
+            for r in records if "name" in r}
 
 
-def check(fresh: dict, previous: dict) -> list:
-    """Return ``(name, message)`` regressions of ``fresh`` vs ``previous``
-    (a name -> best-previous-ms map); empty means no gross slowdown."""
+def check(fresh: dict, previous: dict) -> tuple:
+    """Compare ``fresh`` vs ``previous`` (name -> (best ms, split flag)).
+
+    Returns ``(failures, notices)``: failures are ``(name, message)`` pairs
+    for regressed rows *and* baseline rows missing from the fresh snapshot;
+    notices are rows skipped because their baseline predates the
+    compile/steady-state split."""
     failures = []
-    for name, ms in sorted(fresh.items()):
-        base = previous.get(name)
-        if base is None:
+    notices = []
+    for name, (ms, _) in sorted(fresh.items()):
+        if name not in previous:
             continue  # new row: informational only
+        base, base_split = previous[name]
+        if not base_split:
+            notices.append(
+                (name,
+                 f"baseline {base:.1f} ms has no compile_ms field "
+                 "(compile-dominated measurement) — skipped, not compared"))
+            continue
         if ms <= MIN_MS and base <= MIN_MS:
             continue  # sub-millisecond rows: ratio is timer noise
         if ms > RATIO * max(base, MIN_MS):
@@ -56,7 +74,13 @@ def check(fresh: dict, previous: dict) -> list:
                 (name,
                  f"{ms:.1f} ms vs previous best {base:.1f} ms "
                  f"(> {RATIO:.0f}x)"))
-    return failures
+    for name in sorted(set(previous) - set(fresh)):
+        failures.append(
+            (name,
+             f"baseline row missing from fresh snapshot (previous best "
+             f"{previous[name][0]:.1f} ms) — benchmark dropped or renamed "
+             "without updating the trajectory"))
+    return failures, notices
 
 
 def main(argv) -> int:
@@ -76,23 +100,25 @@ def main(argv) -> int:
     fresh = _load(fresh_path)
     best: dict = {}
     for path in prev_paths:
-        for name, ms in _load(path).items():
-            if name not in best or ms < best[name]:
-                best[name] = ms
-    failures = check(fresh, best)
+        for name, (ms, split) in _load(path).items():
+            # a compile-split baseline always beats a pre-split one (its ms
+            # is actually comparable); within the same era, best wins
+            if (name not in best or (split, -ms) > (best[name][1],
+                                                    -best[name][0])):
+                best[name] = (ms, split)
+    failures, notices = check(fresh, best)
+    for name, msg in notices:
+        print(f"note: {fresh_path}: {name}: {msg}")
     for name, msg in failures:
         print(f"{fresh_path}: {name}: {msg}")
     new = sorted(set(fresh) - set(best))
-    gone = sorted(set(best) - set(fresh))
     if new:
         print(f"note: {len(new)} new row(s): {', '.join(new)}")
-    if gone:
-        print(f"note: {len(gone)} row(s) no longer measured: "
-              f"{', '.join(gone)}")
     if not failures:
         shared = len(set(fresh) & set(best))
         print(f"{fresh_path}: no gross perf regression "
-              f"({shared} shared row(s), threshold {RATIO:.0f}x)")
+              f"({shared} shared row(s), {len(notices)} skipped pre-split "
+              f"baseline(s), threshold {RATIO:.0f}x)")
     return 1 if failures else 0
 
 

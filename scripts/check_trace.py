@@ -1,0 +1,131 @@
+#!/usr/bin/env python
+"""Assert the span-tree structure of an exported pipeline trace.
+
+Reads the Chrome-trace JSON written by ``benchmarks/run.py --trace-dir``
+(the ``spanTree`` side-channel key — explicit nesting, no timestamp
+containment to re-derive) and checks the observability contract of
+``docs/observability.md``:
+
+* the root spans are the pipeline stages, in Algorithm 1 order —
+  CountKmer → CreateSpMat → SpGEMM → Alignment → BuildR → TrReduction →
+  Contigs → Consensus;
+* the SpGEMM stage nests shard_map phase spans, including at least one
+  ``phase="ring_stage"`` descendant (the explicit-exchange ring actually
+  traced) and the skew/ring/collect phases around it;
+* the Contigs stage nests the chain-stage phase spans (cut → doubling →
+  sort under ``phase="chain_stage"``);
+* every ``kind="kernel"`` span sits under a ``kind="op"`` span (kernel
+  launches are reached through the dispatch layer, never free-floating).
+
+Exits 1 with a per-check message when the structure is violated.  Run from
+the repo root::
+
+    python scripts/check_trace.py TRACE_DIR/assemble_trace.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+# Algorithm 1 stage order; every name must appear among the roots, in order.
+STAGES = ("CountKmer", "CreateSpMat", "SpGEMM", "Alignment", "BuildR",
+          "TrReduction", "Contigs", "Consensus")
+
+
+def _walk(node, depth=0):
+    yield node, depth
+    for child in node.get("children", ()):
+        yield from _walk(child, depth + 1)
+
+
+def _descendants(node):
+    for child in node.get("children", ()):
+        yield from _walk(child)
+
+
+def _phases(node):
+    return {n["attrs"].get("phase") for n, _ in _descendants(node)
+            if n["attrs"].get("kind") == "phase"}
+
+
+def check(tree) -> list:
+    """Return failure messages for one ``spanTree`` list; empty = clean."""
+    failures = []
+    roots = [n["name"] for n in tree]
+    stage_pos = [roots.index(s) for s in STAGES if s in roots]
+    missing = [s for s in STAGES if s not in roots]
+    if missing:
+        failures.append(f"missing stage root span(s): {', '.join(missing)}"
+                        f" (roots: {roots})")
+    if stage_pos != sorted(stage_pos):
+        failures.append(f"stage roots out of Algorithm 1 order: {roots}")
+
+    by_name = {n["name"]: n for n in tree}
+    spgemm = by_name.get("SpGEMM")
+    if spgemm is not None:
+        phases = _phases(spgemm)
+        if "ring_stage" not in phases:
+            failures.append(
+                "SpGEMM stage has no phase='ring_stage' descendant — the "
+                f"explicit-exchange ring was not traced (phases: {phases})")
+        for ph in ("skew", "ring", "collect_merge"):
+            if ph not in phases:
+                failures.append(f"SpGEMM stage missing phase={ph!r} span")
+    contigs = by_name.get("Contigs")
+    if contigs is not None:
+        phases = _phases(contigs)
+        for ph in ("chain_stage", "cut", "doubling", "sort"):
+            if ph not in phases:
+                failures.append(f"Contigs stage missing phase={ph!r} span")
+
+    for root in tree:
+        for node, _ in _walk(root):
+            if node["attrs"].get("kind") != "kernel":
+                continue
+            # a kernel span must have an op-span ancestor somewhere up the
+            # path — recompute by scanning: find it on any walk that holds
+            # node in its subtree
+            if not _has_op_ancestor(root, node):
+                failures.append(
+                    f"kernel span {node['name']!r} "
+                    f"({node['attrs'].get('kernel')}) has no kind='op' "
+                    "ancestor — a kernel launch bypassed the dispatch layer")
+    return failures
+
+
+def _has_op_ancestor(root, target, in_op=False) -> bool:
+    if root is target:
+        return in_op
+    in_op = in_op or root["attrs"].get("kind") == "op"
+    return any(_has_op_ancestor(c, target, in_op)
+               for c in root.get("children", ()))
+
+
+def main(argv) -> int:
+    """Check each trace path in ``argv``; 0 = structure holds everywhere."""
+    if not argv:
+        print("usage: check_trace.py TRACE.json [...]", file=sys.stderr)
+        return 2
+    failed = 0
+    for path in argv:
+        with open(path) as f:
+            doc = json.load(f)
+        tree = doc.get("spanTree")
+        if not tree:
+            print(f"{path}: no spanTree key — not a pipeline trace export")
+            failed += 1
+            continue
+        failures = check(tree)
+        for msg in failures:
+            print(f"{path}: {msg}")
+            failed += 1
+        if not failures:
+            n_spans = sum(1 for r in tree for _ in _walk(r))
+            print(f"{path}: span-tree structure ok ({n_spans} spans, "
+                  f"{len(tree)} roots)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -31,7 +31,9 @@ REPO = Path(__file__).resolve().parent.parent
 # the modules whose public APIs carry the documented contracts (PR 5 widened
 # the scope to the TR module — its TRStats.backend accounting is contractual
 # — and the smoke-artifact checker scripts; PR 6 adds the ring-SUMMA module
-# and the fused SpGEMM kernel family)
+# and the fused SpGEMM kernel family; PR 7 adds the observability layer —
+# its span/metrics/export surfaces are the contract docs/observability.md
+# documents — plus the trace checker and the shared benchmark timer)
 DEFAULT_TARGETS = [
     "src/repro/core/components.py",
     "src/repro/core/components_dist.py",
@@ -45,8 +47,14 @@ DEFAULT_TARGETS = [
     "src/repro/kernels/spgemm/ref.py",
     "src/repro/kernels/spgemm/spgemm.py",
     "src/repro/kernels/spgemm/ops.py",
+    "src/repro/obs/trace.py",
+    "src/repro/obs/metrics.py",
+    "src/repro/obs/schema.py",
+    "src/repro/obs/export.py",
+    "benchmarks/_timing.py",
     "scripts/check_smoke_comm.py",
     "scripts/check_bench_regression.py",
+    "scripts/check_trace.py",
     "scripts/lint_docstrings.py",
 ]
 

@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.backend import dispatch, register_op
+from ..obs import schema, validated
 from ..core.components import (
     break_cycles,
     chain_rank,
@@ -259,16 +260,9 @@ def _order_chains(cut, dbl):
 # exchange accounting is part of the ContigSet.stats contract on *every*
 # path: present-and-zero where no explicit exchange runs (gspmd / host), so
 # `bench_contigs --distribution` rows stay comparable without key-existence
-# checks (the shard_map path overwrites these with measured values)
-ZERO_EXCHANGE_STATS = {
-    "exchange_words": 0,
-    "exchange_rounds": 0,
-    "exchange_words_cut": 0,
-    "exchange_words_doubling": 0,
-    "exchange_words_sort": 0,
-    "exchange_rounds_doubling": 0,
-    "exchange_rounds_sort": 0,
-}
+# checks (the shard_map path overwrites these with measured values).  The key
+# set is declared once, in obs/schema.py's "contig_exchange" group.
+ZERO_EXCHANGE_STATS = schema.zero_defaults("contig_exchange")
 
 
 def _chain_state(
@@ -529,12 +523,15 @@ def _device_contig_gen(
     out_codes, out_len, out_states, out_offs, out_widths = _gather_codes(
         st, lay, codes, lengths, c=c, l=l
     )
-    stats = {
-        "n_branch_cut": int(st["n_branch_cut"]),
-        "cc_iterations": int(st["cc_iterations"]),
-        "distribution": distribution,
-        **dist_stats,
-    }
+    stats = validated(
+        {
+            "n_branch_cut": int(st["n_branch_cut"]),
+            "cc_iterations": int(st["cc_iterations"]),
+            "distribution": distribution,
+            **dist_stats,
+        },
+        context="contig_gen", require_groups=("contig_exchange",),
+    )
     return ContigSet(
         codes=out_codes,
         lengths=out_len,
@@ -596,12 +593,15 @@ def _reference_contig_gen(
         offsets=offs,
         widths=widths,
         n_contigs=c,
-        stats={
-            "n_branch_cut": int(n_branch_cut),
-            "cc_iterations": 0,
-            "distribution": "host",
-            **ZERO_EXCHANGE_STATS,
-        },
+        stats=validated(
+            {
+                "n_branch_cut": int(n_branch_cut),
+                "cc_iterations": 0,
+                "distribution": "host",
+                **ZERO_EXCHANGE_STATS,
+            },
+            context="contig_gen_host", require_groups=("contig_exchange",),
+        ),
     )
 
 

@@ -8,14 +8,18 @@
 Every stage is the JAX/TPU adaptation documented in DESIGN.md §2; stages are
 individually jitted, and the overlap SpGEMM + transitive reduction can run
 either locally or 2D-distributed over a mesh (SUMMA).  Per-stage wall-clock is
-collected for the Fig. 5–8 style breakdown benchmark.
+collected for the Fig. 5–8 style breakdown benchmark; with
+``PipelineConfig.trace`` the same stage boundaries open :mod:`repro.obs`
+spans, nesting the shard_map phase and kernel-launch spans the sub-stages
+emit, and the resulting span tree is exportable as a Chrome trace
+(``repro.obs.write_chrome_trace``).
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
-import time
 from typing import Any, Dict, Optional
 
 import jax
@@ -31,6 +35,7 @@ from ..core.transitive_reduction import (
     transitive_reduction,
     transitive_reduction_fused,
 )
+from ..obs import Metrics, Tracer, span, tracing
 from . import alignment as al
 from .consensus import polish_contig_set
 from .contig_gen import generate_contigs
@@ -83,6 +88,10 @@ class PipelineConfig:
     # ring-SUMMA stages fused per spgemm_ring_stages call (the fused Pallas
     # kernel's HBM round trips = ceil(√P / this))
     summa_stages_per_call: int = 4
+    # collect a hierarchical span trace (stage → shard_map phase → kernel
+    # launch) on AssemblyResult.trace; spans also forward to
+    # jax.profiler.TraceAnnotation so device profiles carry the same names
+    trace: bool = False
 
 
 @dataclasses.dataclass
@@ -94,6 +103,7 @@ class AssemblyResult:
     timings: Dict[str, float]
     contained: Any = None  # (n,) bool, reads dropped as contained
     consensus: Any = None  # ConsensusResult when cfg.polish (DESIGN.md §2.8)
+    trace: Any = None  # obs.Tracer with the span tree when cfg.trace
 
     @functools.cached_property
     def polished_contigs(self) -> list:
@@ -103,229 +113,265 @@ class AssemblyResult:
         return self.consensus.to_contigs() if self.consensus else self.contigs
 
 
-def _tic(timings, key, t0, out=None):
-    """Record wall-clock for a stage, first syncing on its output so we
-    measure execution rather than async dispatch."""
-    if out is not None:
-        jax.block_until_ready(out)
-    t = time.perf_counter()
-    timings[key] = timings.get(key, 0.0) + (t - t0)
-    return t
+@contextlib.contextmanager
+def _tic(timings, key):
+    """Stage timing as a thin wrapper over :func:`repro.obs.span` — the one
+    timing code path.  The span device-syncs on whatever the body passes to
+    ``sp.set_output`` (any pytree, dataclasses included), so the recorded
+    wall-clock measures execution rather than async dispatch, and the stage
+    appears in the active tracer's tree when tracing is on."""
+    with span(key, kind="stage") as sp:
+        yield sp
+    timings[key] = timings.get(key, 0.0) + sp.duration_s
 
 
 def assemble(codes, lengths, cfg: PipelineConfig = PipelineConfig()) -> AssemblyResult:
+    tracer = Tracer(annotate=True) if cfg.trace else None
+    if tracer is None:
+        return _assemble(codes, lengths, cfg, tracer=None)
+    with tracing(tracer):
+        return _assemble(codes, lengths, cfg, tracer=tracer)
+
+
+def _assemble(codes, lengths, cfg: PipelineConfig, *, tracer) -> AssemblyResult:
     codes = jnp.asarray(codes, jnp.uint8)
     lengths = jnp.asarray(lengths, jnp.int32)
     n = codes.shape[0]
     backend = resolve_backend(cfg.backend)
     timings: Dict[str, float] = {}
-    stats: Dict[str, Any] = {"n_reads": int(n), "backend": backend}
+    metrics = Metrics(context="assemble")
+    metrics.emit("n_reads", int(n))
+    metrics.emit("backend", backend)
 
     # --- CountKmer (paper: CountKmer) ---
-    t0 = time.perf_counter()
-    kmers = extract_kmers(codes, lengths, k=cfg.k)
-    kc = count_and_select(kmers, lower=cfg.lower, upper=cfg.upper)
-    t0 = _tic(timings, "CountKmer", t0, kc)
-    stats["m_reliable"] = int(kc.m_reliable)
-    stats["n_unique_kmers"] = int(kc.n_unique)
-    stats["n_singletons"] = int(kc.n_singleton)
+    with _tic(timings, "CountKmer") as sp:
+        kmers = extract_kmers(codes, lengths, k=cfg.k)
+        kc = sp.set_output(
+            count_and_select(kmers, lower=cfg.lower, upper=cfg.upper)
+        )
+    metrics.emit_many({
+        "m_reliable": int(kc.m_reliable),
+        "n_unique_kmers": int(kc.n_unique),
+        "n_singletons": int(kc.n_singleton),
+    })
     assert int(kc.m_reliable) <= cfg.m_capacity, (
         f"m_capacity too small: {int(kc.m_reliable)} > {cfg.m_capacity}"
     )
 
     # --- CreateSpMat: A and Aᵀ ---
-    a, at, ovf_a, ovf_at = build_matrices(
-        kc,
-        n_reads=int(n),
-        m_capacity=cfg.m_capacity,
-        read_capacity=cfg.read_capacity,
-        kmer_capacity=cfg.upper,
-    )
-    t0 = _tic(timings, "CreateSpMat", t0, (a.cols, at.cols))
-    stats["overflow_A"] = int(ovf_a)
-    stats["nnz_A"] = int(a.nnz())
+    with _tic(timings, "CreateSpMat") as sp:
+        a, at, ovf_a, ovf_at = build_matrices(
+            kc,
+            n_reads=int(n),
+            m_capacity=cfg.m_capacity,
+            read_capacity=cfg.read_capacity,
+            kmer_capacity=cfg.upper,
+        )
+        sp.set_output((a.cols, at.cols))
+    metrics.emit("overflow_A", int(ovf_a))
+    metrics.emit("nnz_A", int(a.nnz()))
 
     # --- SpGEMM: C = A·Aᵀ under the overlap semiring ---
     # distribution="shard_map" runs it on the explicit-exchange ring SUMMA
     # (zero GSPMD sub-stages, DESIGN.md §2.11) — bit-identical to the local
     # product, with the per-ppermute exchange words surfaced in stats.  The
     # summa exchange stats are present-and-zero on the gspmd path, same
-    # contract as the contig-stage exchange keys below.
-    stats["exchange_words_summa"] = 0
-    stats["exchange_rounds_summa"] = 0
-    if resolve_distribution(cfg.distribution) == "shard_map":
-        from .counter import first_semiring
+    # contract as the contig-stage exchange keys below (seeded from
+    # obs.schema's "summa_exchange" group after the branch).
+    with _tic(timings, "SpGEMM") as sp:
+        if resolve_distribution(cfg.distribution) == "shard_map":
+            from .counter import first_semiring
 
-        summa_mesh = cfg.mesh
-        if (
-            summa_mesh is None
-            or "model" not in getattr(summa_mesh, "axis_names", ())
-            or len(summa_mesh.axis_names) < 2
-        ):
-            summa_mesh = default_summa_mesh()
-        c_mat, ovf_c, summa_stats = overlap_spgemm_shard_map(
-            a, at, semiring=overlap_semiring,
-            operand_semiring=first_semiring,
-            capacity=cfg.overlap_capacity, mesh=summa_mesh, backend=backend,
-            stages_per_call=cfg.summa_stages_per_call,
-        )
-        stats["overlap_distribution"] = "shard_map"
-        for key, val in summa_stats.items():
-            stats[key] = val
-    else:
-        c_mat, ovf_c = spgemm(
-            a, at, semiring=overlap_semiring, capacity=cfg.overlap_capacity
-        )
-        stats["overlap_distribution"] = "gspmd"
-    t0 = _tic(timings, "SpGEMM", t0, c_mat.cols)
-    stats["overflow_C"] = int(ovf_c)
-    stats["nnz_C"] = int(c_mat.nnz())
-    stats["c_density"] = stats["nnz_C"] / max(1, int(n))
+            summa_mesh = cfg.mesh
+            if (
+                summa_mesh is None
+                or "model" not in getattr(summa_mesh, "axis_names", ())
+                or len(summa_mesh.axis_names) < 2
+            ):
+                summa_mesh = default_summa_mesh()
+            c_mat, ovf_c, summa_stats = overlap_spgemm_shard_map(
+                a, at, semiring=overlap_semiring,
+                operand_semiring=first_semiring,
+                capacity=cfg.overlap_capacity, mesh=summa_mesh,
+                backend=backend,
+                stages_per_call=cfg.summa_stages_per_call,
+            )
+            metrics.emit("overlap_distribution", "shard_map")
+            metrics.emit_many(summa_stats)
+        else:
+            c_mat, ovf_c = spgemm(
+                a, at, semiring=overlap_semiring, capacity=cfg.overlap_capacity
+            )
+            metrics.emit("overlap_distribution", "gspmd")
+        sp.set_output(c_mat.cols)
+    metrics.seed_zero("summa_exchange")
+    metrics.emit("overflow_C", int(ovf_c))
+    metrics.emit("nnz_C", int(c_mat.nnz()))
+    metrics.emit("c_density", metrics["nnz_C"] / max(1, int(n)))
 
     # --- Pairwise alignment on nnz(C) (upper triangle; each pair once) ---
-    kq = cfg.overlap_capacity
-    pair_i = jnp.broadcast_to(jnp.arange(n)[:, None], (n, kq)).reshape(-1)
-    pair_j = c_mat.cols.reshape(-1)
-    cnt = c_mat.vals["cnt"].reshape(-1)
-    apos = c_mat.vals["apos"][..., 0].reshape(-1)
-    bpos = c_mat.vals["bpos"][..., 0].reshape(-1)
-    pv = (pair_j > pair_i) & (cnt >= cfg.min_shared_kmers)
+    with _tic(timings, "Alignment") as sp:
+        kq = cfg.overlap_capacity
+        pair_i = jnp.broadcast_to(jnp.arange(n)[:, None], (n, kq)).reshape(-1)
+        pair_j = c_mat.cols.reshape(-1)
+        cnt = c_mat.vals["cnt"].reshape(-1)
+        apos = c_mat.vals["apos"][..., 0].reshape(-1)
+        bpos = c_mat.vals["bpos"][..., 0].reshape(-1)
+        pv = (pair_j > pair_i) & (cnt >= cfg.min_shared_kmers)
 
-    pa = apos // 2
-    ca = apos % 2
-    pb = bpos // 2
-    cb = bpos % 2
-    strand = jnp.where(pv, ca ^ cb, 0)
-    li = lengths[jnp.where(pv, pair_i, 0)]
-    lj = lengths[jnp.where(pv, pair_j, 0)]
-    pb_or = jnp.where(strand == 1, lj - cfg.k - pb, pb)
+        pa = apos // 2
+        ca = apos % 2
+        pb = bpos // 2
+        cb = bpos % 2
+        strand = jnp.where(pv, ca ^ cb, 0)
+        li = lengths[jnp.where(pv, pair_i, 0)]
+        lj = lengths[jnp.where(pv, pair_j, 0)]
+        pb_or = jnp.where(strand == 1, lj - cfg.k - pb, pb)
 
-    # Candidate compaction: C's ELL layout leaves most of the n × K_C slots
-    # masked — instead of aligning every slot, gather the pv-valid pairs into
-    # a bucket padded to the next power of two of the live count, align only
-    # the bucket (row-chunked), and scatter results back to slot order.
-    e_total = int(pair_i.shape[0])
-    n_live = int(jnp.sum(pv))
-    bucket = next_pow2(n_live)
-    idx = jnp.nonzero(pv, size=bucket, fill_value=0)[0]
-    live = jnp.arange(bucket) < n_live
+        # Candidate compaction: C's ELL layout leaves most of the n × K_C
+        # slots masked — instead of aligning every slot, gather the pv-valid
+        # pairs into a bucket padded to the next power of two of the live
+        # count, align only the bucket (row-chunked), and scatter results
+        # back to slot order.
+        e_total = int(pair_i.shape[0])
+        n_live = int(jnp.sum(pv))
+        bucket = next_pow2(n_live)
+        idx = jnp.nonzero(pv, size=bucket, fill_value=0)[0]
+        live = jnp.arange(bucket) < n_live
 
-    cand = {
-        "i": pair_i[idx],
-        "j": pair_j[idx],
-        "li": li[idx],
-        "lj": lj[idx],
-        "pa": jnp.maximum(pa[idx], 0),
-        "pb": jnp.maximum(pb_or[idx], 0),
-        "strand": strand[idx],
-    }
+        cand = {
+            "i": pair_i[idx],
+            "j": pair_j[idx],
+            "li": li[idx],
+            "lj": lj[idx],
+            "pa": jnp.maximum(pa[idx], 0),
+            "pb": jnp.maximum(pb_or[idx], 0),
+            "strand": strand[idx],
+        }
 
-    def _align_block(blk):
-        ai = codes[blk["i"]]
-        bj = codes[blk["j"]]
-        bj = jnp.where((blk["strand"] == 1)[:, None], revcomp(bj, blk["lj"]), bj)
-        out = al.batch_extend(
-            ai, blk["li"], bj, blk["lj"], blk["pa"], blk["pb"],
-            k=cfg.k, backend=backend, xdrop=cfg.xdrop, match=cfg.match,
-            mismatch=cfg.mismatch, gap=cfg.gap, band=cfg.band,
-            max_steps=cfg.max_steps,
+        def _align_block(blk):
+            ai = codes[blk["i"]]
+            bj = codes[blk["j"]]
+            bj = jnp.where(
+                (blk["strand"] == 1)[:, None], revcomp(bj, blk["lj"]), bj
+            )
+            out = al.batch_extend(
+                ai, blk["li"], bj, blk["lj"], blk["pa"], blk["pb"],
+                k=cfg.k, backend=backend, xdrop=cfg.xdrop, match=cfg.match,
+                mismatch=cfg.mismatch, gap=cfg.gap, band=cfg.band,
+                max_steps=cfg.max_steps,
+            )
+            return tuple(out), None
+
+        res_b, _ = map_row_blocks(
+            _align_block, cand, n_rows=bucket,
+            row_chunk=min(cfg.align_chunk, bucket),
         )
-        return tuple(out), None
 
-    res_b, _ = map_row_blocks(
-        _align_block, cand, n_rows=bucket,
-        row_chunk=min(cfg.align_chunk, bucket),
-    )
+        # Scatter bucket results back to the (n · K_C,) slot layout; dead
+        # slots (pv False) keep zeros and are masked out of ``passed`` below.
+        safe_slot = jnp.where(live, idx, e_total)
 
-    # Scatter bucket results back to the (n · K_C,) slot layout; dead slots
-    # (pv False) keep zeros and are masked out of ``passed`` below.
-    safe_slot = jnp.where(live, idx, e_total)
+        def _scatter(x):
+            buf = jnp.zeros((e_total + 1,) + x.shape[1:], x.dtype)
+            return buf.at[safe_slot].set(x)[:e_total]
 
-    def _scatter(x):
-        buf = jnp.zeros((e_total + 1,) + x.shape[1:], x.dtype)
-        return buf.at[safe_slot].set(x)[:e_total]
+        res = al.PairAlignment(*(_scatter(x) for x in res_b))
+        sp.set_output(res.score)
 
-    res = al.PairAlignment(*(_scatter(x) for x in res_b))
-    t0 = _tic(timings, "Alignment", t0, res.score)
-
-    span = jnp.minimum(res.ei - res.bi, res.ej - res.bj)
+    ospan = jnp.minimum(res.ei - res.bi, res.ej - res.bj)
     passed = (
         pv
-        & (res.score >= cfg.score_frac * span)
-        & (span >= cfg.min_overlap)
+        & (res.score >= cfg.score_frac * ospan)
+        & (ospan >= cfg.min_overlap)
     )
-    stats["n_aligned"] = n_live
-    stats["align_candidates"] = e_total
-    stats["align_bucket"] = int(bucket)
-    stats["n_passed"] = int(jnp.sum(passed))
+    metrics.emit_many({
+        "n_aligned": n_live,
+        "align_candidates": e_total,
+        "align_bucket": int(bucket),
+        "n_passed": int(jnp.sum(passed)),
+    })
 
     # --- Build R: classify overlaps, drop contained ---
-    cls = classify_overlaps(
-        res.bi, res.ei, li, res.bj, res.ej, lj, strand, end_fuzz=cfg.end_fuzz
-    )
-    r_mat, contained, ovf_r = build_overlap_graph(
-        pair_i, pair_j, cls, passed, n_reads=int(n), capacity=cfg.r_capacity
-    )
-    r_mat = drop_contained(r_mat, contained)
-    t0 = _tic(timings, "BuildR", t0, r_mat.cols)
-    stats["overflow_R"] = int(ovf_r)
-    stats["nnz_R"] = int(r_mat.nnz())
-    stats["r_density"] = stats["nnz_R"] / max(1, int(n))
-    stats["n_contained"] = int(jnp.sum(contained))
+    with _tic(timings, "BuildR") as sp:
+        cls = classify_overlaps(
+            res.bi, res.ei, li, res.bj, res.ej, lj, strand,
+            end_fuzz=cfg.end_fuzz,
+        )
+        r_mat, contained, ovf_r = build_overlap_graph(
+            pair_i, pair_j, cls, passed, n_reads=int(n),
+            capacity=cfg.r_capacity,
+        )
+        r_mat = drop_contained(r_mat, contained)
+        sp.set_output(r_mat.cols)
+    metrics.emit("overflow_R", int(ovf_r))
+    metrics.emit("nnz_R", int(r_mat.nnz()))
+    metrics.emit("r_density", metrics["nnz_R"] / max(1, int(n)))
+    metrics.emit("n_contained", int(jnp.sum(contained)))
 
     # --- TrReduction: Algorithm 2 ---
-    tr = transitive_reduction_fused if cfg.fused_tr else transitive_reduction
-    s_mat, tr_stats = tr(
-        r_mat, fuzz=cfg.tr_fuzz, max_iters=cfg.tr_max_iters, backend=backend
-    )
-    t0 = _tic(timings, "TrReduction", t0, s_mat.cols)
-    stats["tr_iterations"] = int(tr_stats.iterations)
+    with _tic(timings, "TrReduction") as sp:
+        tr = transitive_reduction_fused if cfg.fused_tr else transitive_reduction
+        s_mat, tr_stats = tr(
+            r_mat, fuzz=cfg.tr_fuzz, max_iters=cfg.tr_max_iters,
+            backend=backend,
+        )
+        sp.set_output(s_mat.cols)
+    metrics.emit("tr_iterations", int(tr_stats.iterations))
     # the kernel path that actually ran: transitive_reduction_fused silently
     # downgrades backend="pallas" to the sampled ELL square above
     # TR_DENSE_MAX_ROWS, and benchmark rows must label the real path
-    stats["tr_backend"] = tr_stats.backend
-    stats["tr_overflow"] = int(tr_stats.n_overflow)
-    stats["nnz_S"] = int(s_mat.nnz())
-    stats["s_density"] = stats["nnz_S"] / max(1, int(n))
+    metrics.emit("tr_backend", tr_stats.backend)
+    metrics.emit("tr_overflow", int(tr_stats.n_overflow))
+    metrics.emit("nnz_S", int(s_mat.nnz()))
+    metrics.emit("s_density", metrics["nnz_S"] / max(1, int(n)))
 
     # --- Contigs (backend-dispatched: host walk or device path, §2.7;
     # distribution-dispatched: gspmd or shard_map doubling, §2.9) ---
-    cset = generate_contigs(
-        s_mat, codes, lengths, contained, backend=backend,
-        distribution=cfg.distribution, mesh=cfg.mesh,
-    )
-    contigs = cset.to_contigs()
-    cs = contig_stats(contigs)
-    t0 = _tic(timings, "Contigs", t0, cset.codes)
-    stats["contigs"] = dataclasses.asdict(cs)
-    stats["n_branch_cut"] = cset.stats["n_branch_cut"]
-    stats["cc_iterations"] = cset.stats["cc_iterations"]
+    with _tic(timings, "Contigs") as sp:
+        cset = generate_contigs(
+            s_mat, codes, lengths, contained, backend=backend,
+            distribution=cfg.distribution, mesh=cfg.mesh,
+        )
+        contigs = cset.to_contigs()
+        cs = contig_stats(contigs)
+        sp.set_output(cset.codes)
+    metrics.emit("contigs", dataclasses.asdict(cs))
+    metrics.emit("n_branch_cut", cset.stats["n_branch_cut"])
+    metrics.emit("cc_iterations", cset.stats["cc_iterations"])
     # what actually ran: "gspmd"/"shard_map" on the device path, "host" when
     # the backend resolved to the reference walk (the knob then has no
     # effect — surfaced rather than silently re-labelled)
-    stats["distribution"] = cset.stats["distribution"]
+    metrics.emit("distribution", cset.stats["distribution"])
     # exchange accounting is present-and-zero on paths without explicit
     # exchanges (gspmd / host), so distribution-axis benchmark rows compare
-    # without key-existence checks (DESIGN.md §2.10)
-    for key, val in cset.stats.items():
-        if key.startswith("exchange_"):
-            stats[key] = val
+    # without key-existence checks (DESIGN.md §2.10); the key set is the
+    # schema's "contig_exchange" group
+    metrics.emit_many({
+        key: val for key, val in cset.stats.items()
+        if key.startswith("exchange_")
+    })
+    metrics.seed_zero("contig_exchange")
 
     # --- Consensus: pileup polishing of the contig tensor (§2.8) ---
     cres = None
     if cfg.polish:
-        cres = polish_contig_set(
-            cset, codes, lengths, backend=backend, min_depth=cfg.min_depth,
-            band=cfg.pileup_band, junction_radius=cfg.junction_radius,
-        )
-        _tic(timings, "Consensus", t0, cres.codes)
-        stats["consensus_depth_mean"] = cres.stats["consensus_depth_mean"]
-        stats["identity_estimate"] = cres.stats["identity_estimate"]
-        stats["qv_estimate"] = cres.stats["qv_estimate"]
-        stats["consensus_changed"] = cres.stats["n_changed"]
-        stats["n_junction_shifted"] = cres.stats["n_junction_shifted"]
+        with _tic(timings, "Consensus") as sp:
+            cres = polish_contig_set(
+                cset, codes, lengths, backend=backend,
+                min_depth=cfg.min_depth, band=cfg.pileup_band,
+                junction_radius=cfg.junction_radius,
+            )
+            sp.set_output(cres.codes)
+        metrics.emit_many({
+            "consensus_depth_mean": cres.stats["consensus_depth_mean"],
+            "identity_estimate": cres.stats["identity_estimate"],
+            "qv_estimate": cres.stats["qv_estimate"],
+            "consensus_changed": cres.stats["n_changed"],
+            "n_junction_shifted": cres.stats["n_junction_shifted"],
+        })
 
     return AssemblyResult(
-        r_graph=r_mat, s_graph=s_mat, contigs=contigs, stats=stats,
-        timings=timings, contained=contained, consensus=cres,
+        r_graph=r_mat, s_graph=s_mat, contigs=contigs, stats=metrics.as_dict(),
+        timings=timings, contained=contained, consensus=cres, trace=tracer,
     )

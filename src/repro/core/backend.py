@@ -76,9 +76,12 @@ knob the same way ``resolve_backend`` does.
 
 from __future__ import annotations
 
+import functools
 from typing import Callable, Dict, Tuple
 
 import jax
+
+from ..obs.trace import span
 
 BACKENDS = ("auto", "reference", "pallas")
 
@@ -145,7 +148,13 @@ def _ensure_registered() -> None:
 
 def dispatch(op: str, backend: str = "auto") -> Callable:
     """Return the implementation of ``op`` for ``backend`` (resolving
-    ``"auto"`` by platform)."""
+    ``"auto"`` by platform).
+
+    The returned callable is the registered implementation wrapped in an
+    ``obs.span`` (name ``"op:<op>"``, kind ``"op"``) — the single place
+    every dispatched call gets its launch span, so pipeline traces nest
+    stage → shard_map phase → op without per-op wiring.  Inside a jit trace
+    the span fires at trace time, which is where the nesting lives."""
     b = resolve_backend(backend)
     key = (op, b)
     if key not in _REGISTRY:
@@ -154,4 +163,11 @@ def dispatch(op: str, backend: str = "auto") -> Callable:
         known = sorted({o for (o, _) in _REGISTRY})
         raise KeyError(f"no {b!r} implementation registered for op {op!r}; "
                        f"known ops: {known}")
-    return _REGISTRY[key]
+    fn = _REGISTRY[key]
+
+    @functools.wraps(fn)
+    def dispatched(*args, **kwargs):
+        with span(f"op:{op}", kind="op", op=op, backend=b):
+            return fn(*args, **kwargs)
+
+    return dispatched

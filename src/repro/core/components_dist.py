@@ -52,6 +52,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..compat import shard_map
+from ..obs.trace import span
 from .components import _log2_ceil, expand_state_rows
 
 # ring all-gathers issued per doubling round, by phase (see module
@@ -429,82 +430,88 @@ def _make_contig_stage(mesh, row_axes: Tuple[str, ...], n_read_pad: int,
 
         # --- branch cut: expand local read rows to state rows (row-local,
         # no exchange), tally degrees per shard, one psum round ---
-        g_cols, g_vals = expand_state_rows(cols_l, vals_l)
-        mask = g_cols >= 0
-        out_deg_l = jnp.sum(mask, axis=1).astype(jnp.int32)
-        tally_to = jnp.where(mask, g_cols, n_states).reshape(-1)
-        tally = (
-            jnp.zeros(n_states + 1, jnp.int32)
-            .at[tally_to]
-            .add(1)[:n_states]
-        )
-        in_deg = psum_all(tally)  # global in-degree, replicated
+        with span("Contigs", kind="phase", phase="cut"):
+            g_cols, g_vals = expand_state_rows(cols_l, vals_l)
+            mask = g_cols >= 0
+            out_deg_l = jnp.sum(mask, axis=1).astype(jnp.int32)
+            tally_to = jnp.where(mask, g_cols, n_states).reshape(-1)
+            tally = (
+                jnp.zeros(n_states + 1, jnp.int32)
+                .at[tally_to]
+                .add(1)[:n_states]
+            )
+            in_deg = psum_all(tally)  # global in-degree, replicated
 
-        tgt = jnp.max(jnp.where(mask, g_cols, -1), axis=1)
-        suf = jnp.sum(jnp.where(mask, g_vals, 0.0), axis=1)
-        tgt_safe = jnp.where(tgt >= 0, tgt, 0)
-        kept = (out_deg_l == 1) & (tgt >= 0) & (in_deg[tgt_safe] == 1)
-        succ_l = jnp.where(kept, tgt, -1)
-        n_branch_cut = psum_all(
-            jnp.sum(out_deg_l) - jnp.sum(kept).astype(jnp.int32)
-        )
+            tgt = jnp.max(jnp.where(mask, g_cols, -1), axis=1)
+            suf = jnp.sum(jnp.where(mask, g_vals, 0.0), axis=1)
+            tgt_safe = jnp.where(tgt >= 0, tgt, 0)
+            kept = (out_deg_l == 1) & (tgt >= 0) & (in_deg[tgt_safe] == 1)
+            succ_l = jnp.where(kept, tgt, -1)
+            n_branch_cut = psum_all(
+                jnp.sum(out_deg_l) - jnp.sum(kept).astype(jnp.int32)
+            )
 
-        # pred / in-suffix: in-deg(target)==1 makes both scatters single-
-        # writer, so a −1-init pmax (resp. 0-init psum) equals the local
-        # `.at[].set()` exactly; each shard then slices its own chunk back
-        scat = jnp.where(kept, succ_l, n_states)
-        pred_buf = (
-            jnp.full(n_states + 1, -1, jnp.int32)
-            .at[scat]
-            .max(ids_l)[:n_states]
-        )
-        pred_l = jax.lax.dynamic_slice(
-            jax.lax.pmax(pred_buf, axes), (idx * n_loc,), (n_loc,)
-        )
-        insuf_buf = (
-            jnp.zeros(n_states + 1, jnp.float32).at[scat].add(suf)[:n_states]
-        )
-        insuf_l = jax.lax.dynamic_slice(
-            psum_all(insuf_buf), (idx * n_loc,), (n_loc,)
-        )
-        in_deg_l = jax.lax.dynamic_slice(in_deg, (idx * n_loc,), (n_loc,))
-        has_edge_l = (out_deg_l + in_deg_l).reshape(-1, 2).sum(axis=1) > 0
+            # pred / in-suffix: in-deg(target)==1 makes both scatters single-
+            # writer, so a −1-init pmax (resp. 0-init psum) equals the local
+            # `.at[].set()` exactly; each shard then slices its own chunk back
+            scat = jnp.where(kept, succ_l, n_states)
+            pred_buf = (
+                jnp.full(n_states + 1, -1, jnp.int32)
+                .at[scat]
+                .max(ids_l)[:n_states]
+            )
+            pred_l = jax.lax.dynamic_slice(
+                jax.lax.pmax(pred_buf, axes), (idx * n_loc,), (n_loc,)
+            )
+            insuf_buf = (
+                jnp.zeros(n_states + 1, jnp.float32)
+                .at[scat]
+                .add(suf)[:n_states]
+            )
+            insuf_l = jax.lax.dynamic_slice(
+                psum_all(insuf_buf), (idx * n_loc,), (n_loc,)
+            )
+            in_deg_l = jax.lax.dynamic_slice(in_deg, (idx * n_loc,), (n_loc,))
+            has_edge_l = (out_deg_l + in_deg_l).reshape(-1, 2).sum(axis=1) > 0
 
         # --- doubling middle (shared body, §2.9) ---
-        succ2, pred2, labels, head, rank, n_cut, pc_iters, cr_iters = (
-            _doubling_phases(succ_l, pred_l, ids_l, gather, psum_all,
-                             max_rounds)
-        )
+        with span("Contigs", kind="phase", phase="doubling"):
+            succ2, pred2, labels, head, rank, n_cut, pc_iters, cr_iters = (
+                _doubling_phases(succ_l, pred_l, ids_l, gather, psum_all,
+                                 max_rounds)
+            )
 
         # --- chain ordering: ring-bitonic merge-split sort (§2.10) over
         # the (labkey, rank, idx) triples; idx makes keys globally unique,
         # so the unique sorted order equals the local path's stable
         # lexsort((rank, labkey)) bit for bit ---
-        out_deg_g = gather(out_deg_l)  # eligibility: out_deg[head]
-        elig_l = out_deg_g[head] > 0
-        labkey = jnp.where(elig_l, labels, _SORT_BIG)
-        labkey = jnp.where(ids_l >= 2 * n_reads, _SORT_BIG + 1, labkey)
+        with span("Contigs", kind="phase", phase="sort",
+                  sort_stages=len(stages)):
+            out_deg_g = gather(out_deg_l)  # eligibility: out_deg[head]
+            elig_l = out_deg_g[head] > 0
+            labkey = jnp.where(elig_l, labels, _SORT_BIG)
+            labkey = jnp.where(ids_l >= 2 * n_reads, _SORT_BIG + 1, labkey)
 
-        order = jnp.lexsort((ids_l, rank, labkey))
-        k1, k2, k3 = labkey[order], rank[order], ids_l[order]
-        for pairs in stages:
-            perm = [pq for ab in pairs for pq in (ab, ab[::-1])]
-            role_tab = np.zeros(p, np.int32)
-            for lo, hi in pairs:
-                role_tab[lo], role_tab[hi] = 1, -1
-            role = jnp.asarray(role_tab)[idx]
-            r1 = jax.lax.ppermute(k1, axes, perm)
-            r2 = jax.lax.ppermute(k2, axes, perm)
-            r3 = jax.lax.ppermute(k3, axes, perm)
-            c1 = jnp.concatenate([k1, r1])
-            c2 = jnp.concatenate([k2, r2])
-            c3 = jnp.concatenate([k3, r3])
-            o = jnp.lexsort((c3, c2, c1))
-            sel = jnp.where(role >= 0, o[:n_loc], o[n_loc:])
-            # an idle shard (odd-P transposition stages) keeps its block
-            k1 = jnp.where(role == 0, k1, c1[sel])
-            k2 = jnp.where(role == 0, k2, c2[sel])
-            k3 = jnp.where(role == 0, k3, c3[sel])
+            order = jnp.lexsort((ids_l, rank, labkey))
+            k1, k2, k3 = labkey[order], rank[order], ids_l[order]
+            for pairs in stages:
+                perm = [pq for ab in pairs for pq in (ab, ab[::-1])]
+                role_tab = np.zeros(p, np.int32)
+                for lo, hi in pairs:
+                    role_tab[lo], role_tab[hi] = 1, -1
+                role = jnp.asarray(role_tab)[idx]
+                r1 = jax.lax.ppermute(k1, axes, perm)
+                r2 = jax.lax.ppermute(k2, axes, perm)
+                r3 = jax.lax.ppermute(k3, axes, perm)
+                c1 = jnp.concatenate([k1, r1])
+                c2 = jnp.concatenate([k2, r2])
+                c3 = jnp.concatenate([k3, r3])
+                o = jnp.lexsort((c3, c2, c1))
+                sel = jnp.where(role >= 0, o[:n_loc], o[n_loc:])
+                # an idle shard (odd-P transposition stages) keeps its block
+                k1 = jnp.where(role == 0, k1, c1[sel])
+                k2 = jnp.where(role == 0, k2, c2[sel])
+                k3 = jnp.where(role == 0, k3, c3[sel])
 
         # chain boundaries: previous element's labkey, shipped across the
         # shard seam by a single-hop ring shift (1 word)
@@ -578,10 +585,11 @@ def contig_stage_shard_map(
             [vals, jnp.full((pad,) + vals.shape[1:], jnp.inf, vals.dtype)]
         )
     fn = _make_contig_stage(mesh, row_axes, n_read_pad, n)
-    (state_s, elig_s, rank_s, chain_idx_s, new_chain, insuf, has_edge,
-     n_chains, max_chain, n_branch_cut, n_cut, pc_iters, cr_iters) = fn(
-        cols, vals
-    )
+    with span("Contigs", kind="phase", phase="chain_stage", p=p) as sp:
+        (state_s, elig_s, rank_s, chain_idx_s, new_chain, insuf, has_edge,
+         n_chains, max_chain, n_branch_cut, n_cut, pc_iters, cr_iters) = (
+            sp.set_output(fn(cols, vals))
+        )
     n2 = 2 * n
     n_pad = 2 * n_read_pad
     st = {

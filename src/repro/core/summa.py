@@ -51,7 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
+from functools import lru_cache, partial
 from typing import Any, Dict, Sequence, Tuple
 
 import jax
@@ -59,6 +59,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import pvary, shard_map
+from ..obs import schema, validated
+from ..obs.trace import span
 from .backend import dispatch, resolve_backend
 from .semiring import INF, Semiring, minplus_orient_semiring as MPSR, tree_where
 from .spgemm import spgemm
@@ -356,6 +358,125 @@ def distribute_ell_blocks(
     )
 
 
+@lru_cache(maxsize=None)
+def _ring_program(
+    mesh: Mesh, row_axis: str, col_axis: str, pc: int, g: int,
+    semiring: Semiring, out_block_capacity: int, n_cols_out: int,
+    backend: str, n_loc: int, nb_b: int, wa_rot: int, wb_rot: int,
+):
+    """Build (and cache) the jitted shard_map ring program for one
+    (mesh, grid, semiring, capacity, backend, shape) key.
+
+    Caching is what makes repeated ``summa_ring`` calls steady-state: the
+    old per-call ``jax.jit(shard_map(f))`` re-traced and re-compiled the
+    whole ring every call (the pre-split ``BENCH_6.json`` overlap row is
+    ~14 s of almost pure jit time; ``BENCH_7.json`` splits that into
+    ``compile_ms`` vs steady-state ``ms``), and
+    ``dist_transitive_reduction_ring`` paid it once per pass.  ``Semiring`` is a frozen dataclass and ``Mesh``
+    hashes by value, so both key directly.
+
+    Returns ``(fm, acct)`` where ``acct`` is the trace-time exchange
+    accounting dict: the traced body resets it at the start of every trace
+    and increments it next to each ``ppermute``, so after the first call it
+    holds the per-device words/rounds of the deterministic schedule —
+    cached calls reuse the dict, re-traces recount idempotently."""
+    spec = P((row_axis,), col_axis)
+    acct = {"words": 0, "rounds": 0}
+    op = dispatch("spgemm_ring_stages", backend)
+    left = [((t + 1) % pc, t) for t in range(pc)]  # rotate left/up
+
+    def f(a_cols, a_vals, b_cols, b_vals):
+        acct["words"] = 0  # fresh trace: recount the schedule
+        acct["rounds"] = 0
+        i = jax.lax.axis_index(row_axis)
+        j = jax.lax.axis_index(col_axis)
+        both = (row_axis, col_axis)
+
+        def rotate(ac, av, bc, bv):
+            # Trace-time accounting: these counters measure the per-device
+            # words of every ppermute issued by one execution's schedule.
+            acct["words"] += wa_rot + wb_rot
+            acct["rounds"] += 1
+            ac = jax.lax.ppermute(ac, col_axis, left)
+            av = jax.tree.map(lambda v: jax.lax.ppermute(v, col_axis, left), av)
+            bc = jax.lax.ppermute(bc, row_axis, left)
+            bv = jax.tree.map(lambda v: jax.lax.ppermute(v, row_axis, left), bv)
+            return ac, av, bc, bv
+
+        cur = (a_cols, a_vals, b_cols, b_vals)
+        chunks_cols, chunks_vals = [], []
+        ovf = pvary(jnp.int32(0), both)
+        s = 0
+        while s < pc:
+            sc = min(g, pc - s)
+            with span("SpGEMM", kind="phase", phase="ring_stage", s=s,
+                      stages=sc):
+                panels = [cur]
+                for _ in range(sc - 1):
+                    cur = rotate(*cur)
+                    panels.append(cur)
+                st_a_cols = jnp.stack([p[0] for p in panels])
+                st_a_vals = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *[p[1] for p in panels]
+                )
+                st_b_cols = jnp.stack([p[2] for p in panels])
+                st_b_vals = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *[p[3] for p in panels]
+                )
+                offsets = (((i + j + s + jnp.arange(sc)) % pc) * nb_b).astype(
+                    jnp.int32
+                )
+                if s + sc < pc:
+                    # Rotation feeding the NEXT batch, issued before the
+                    # batch's multiply consumes its own (already stacked)
+                    # panels — XLA is free to overlap the exchange with the
+                    # in-flight compute.
+                    cur = rotate(*cur)
+                cc, cv, so = op(
+                    offsets, st_a_cols, st_a_vals, st_b_cols, st_b_vals,
+                    semiring=semiring, capacity=out_block_capacity,
+                    n_cols_out=n_cols_out,
+                )
+            chunks_cols.append(cc)
+            chunks_vals.append(cv)
+            ovf = ovf + so
+            s += sc
+        st_cols = jnp.concatenate(chunks_cols, axis=0)  # (pc, n_loc, cap)
+        st_vals = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *chunks_vals
+        )
+        # Canonical reorder: buffer q ← stage producing k-block q, so the
+        # final merge sees candidates in ascending global-column order — the
+        # exact sequence the local spgemm's a-slot-ascending expansion feeds
+        # merge_sorted_rows (bit-parity for order-dependent ⊕).
+        order = (jnp.arange(pc) - (i + j)) % pc
+        st_cols = jnp.take(st_cols, order, axis=0)
+        st_vals = jax.tree.map(lambda v: jnp.take(v, order, axis=0), st_vals)
+        merged_cols = jnp.moveaxis(st_cols, 0, 1).reshape(
+            n_loc, pc * out_block_capacity
+        )
+        merged_vals = jax.tree.map(
+            lambda v: jnp.moveaxis(v, 0, 1).reshape(
+                (n_loc, pc * out_block_capacity) + v.shape[3:]
+            ),
+            st_vals,
+        )
+        with span("SpGEMM", kind="phase", phase="stage_merge"):
+            mc, mv, mo = merge_sorted_rows(
+                merged_cols, merged_vals,
+                capacity=out_block_capacity, semiring=semiring,
+            )
+        return mc, mv, jax.lax.psum(ovf + mo, both)
+
+    fm = jax.jit(
+        shard_map(
+            f, mesh=mesh, in_specs=(spec, spec, spec, spec),
+            out_specs=(spec, spec, P()),
+        )
+    )
+    return fm, acct
+
+
 def summa_ring(
     a: DistEll,
     b: DistEll,
@@ -414,12 +535,12 @@ def summa_ring(
         out, ovf = summa_allgather(
             a, b, semiring=semiring, out_block_capacity=out_block_capacity
         )
-        return out, ovf, {
+        return out, ovf, validated({
             "summa_algorithm": "allgather_fallback",
             "summa_fallback_reason": fallback_reason,
-            "exchange_words_summa": 0,
-            "exchange_rounds_summa": 0,
-        }
+            **schema.zero_defaults("summa_exchange"),
+        }, context="summa_allgather_fallback",
+            require_groups=("summa_exchange",))
 
     spec = P((row_axis,), col_axis)
     n_cols_out = b.mat.n_cols
@@ -432,102 +553,22 @@ def summa_ring(
     # Words moved by one rotation of both panels (per device, 4-byte scalars).
     wa_rot = n_loc * ka * _slot_words(a.mat.vals)
     wb_rot = nb_b * kb * _slot_words(b.mat.vals)
-    acct = {"words": 0, "rounds": 0}
-
-    a_sk = _skew_a(a.mat, pr, pc)
-    b_sk = _skew_b(b.mat, pr, pc)
-    op = dispatch("spgemm_ring_stages", backend)
-    g = max(1, min(stages_per_call, pc))
-    left = [((t + 1) % pc, t) for t in range(pc)]  # rotate left/up
-
-    def f(a_cols, a_vals, b_cols, b_vals):
-        i = jax.lax.axis_index(row_axis)
-        j = jax.lax.axis_index(col_axis)
-        both = (row_axis, col_axis)
-
-        def rotate(ac, av, bc, bv):
-            # Trace-time accounting: f is traced exactly once per summa_ring
-            # call (fresh jit below), so these counters measure the per-device
-            # words of every ppermute actually issued.
-            acct["words"] += wa_rot + wb_rot
-            acct["rounds"] += 1
-            ac = jax.lax.ppermute(ac, col_axis, left)
-            av = jax.tree.map(lambda v: jax.lax.ppermute(v, col_axis, left), av)
-            bc = jax.lax.ppermute(bc, row_axis, left)
-            bv = jax.tree.map(lambda v: jax.lax.ppermute(v, row_axis, left), bv)
-            return ac, av, bc, bv
-
-        cur = (a_cols, a_vals, b_cols, b_vals)
-        chunks_cols, chunks_vals = [], []
-        ovf = pvary(jnp.int32(0), both)
-        s = 0
-        while s < pc:
-            sc = min(g, pc - s)
-            panels = [cur]
-            for _ in range(sc - 1):
-                cur = rotate(*cur)
-                panels.append(cur)
-            st_a_cols = jnp.stack([p[0] for p in panels])
-            st_a_vals = jax.tree.map(
-                lambda *xs: jnp.stack(xs), *[p[1] for p in panels]
-            )
-            st_b_cols = jnp.stack([p[2] for p in panels])
-            st_b_vals = jax.tree.map(
-                lambda *xs: jnp.stack(xs), *[p[3] for p in panels]
-            )
-            offsets = (((i + j + s + jnp.arange(sc)) % pc) * nb_b).astype(
-                jnp.int32
-            )
-            if s + sc < pc:
-                # Rotation feeding the NEXT batch, issued before the batch's
-                # multiply consumes its own (already stacked) panels — XLA is
-                # free to overlap the exchange with the in-flight compute.
-                cur = rotate(*cur)
-            cc, cv, so = op(
-                offsets, st_a_cols, st_a_vals, st_b_cols, st_b_vals,
-                semiring=semiring, capacity=out_block_capacity,
-                n_cols_out=n_cols_out,
-            )
-            chunks_cols.append(cc)
-            chunks_vals.append(cv)
-            ovf = ovf + so
-            s += sc
-        st_cols = jnp.concatenate(chunks_cols, axis=0)  # (pc, n_loc, cap)
-        st_vals = jax.tree.map(
-            lambda *xs: jnp.concatenate(xs, axis=0), *chunks_vals
-        )
-        # Canonical reorder: buffer q ← stage producing k-block q, so the
-        # final merge sees candidates in ascending global-column order — the
-        # exact sequence the local spgemm's a-slot-ascending expansion feeds
-        # merge_sorted_rows (bit-parity for order-dependent ⊕).
-        order = (jnp.arange(pc) - (i + j)) % pc
-        st_cols = jnp.take(st_cols, order, axis=0)
-        st_vals = jax.tree.map(lambda v: jnp.take(v, order, axis=0), st_vals)
-        merged_cols = jnp.moveaxis(st_cols, 0, 1).reshape(
-            n_loc, pc * out_block_capacity
-        )
-        merged_vals = jax.tree.map(
-            lambda v: jnp.moveaxis(v, 0, 1).reshape(
-                (n_loc, pc * out_block_capacity) + v.shape[3:]
-            ),
-            st_vals,
-        )
-        mc, mv, mo = merge_sorted_rows(
-            merged_cols, merged_vals,
-            capacity=out_block_capacity, semiring=semiring,
-        )
-        return mc, mv, jax.lax.psum(ovf + mo, both)
-
-    fm = jax.jit(
-        shard_map(
-            f, mesh=mesh, in_specs=(spec, spec, spec, spec),
-            out_specs=(spec, spec, P()),
-        )
-    )
-    cc, cv, ovf = fm(a_sk.cols, a_sk.vals, b_sk.cols, b_sk.vals)
-    cm = EllMatrix(cols=cc, vals=cv, n_cols=n_cols_out)
 
     resolved = resolve_backend(backend)
+    with span("SpGEMM", kind="phase", phase="skew"):
+        a_sk = _skew_a(a.mat, pr, pc)
+        b_sk = _skew_b(b.mat, pr, pc)
+    g = max(1, min(stages_per_call, pc))
+    fm, acct = _ring_program(
+        mesh, row_axis, col_axis, pc, g, semiring, out_block_capacity,
+        n_cols_out, resolved, n_loc, nb_b, wa_rot, wb_rot,
+    )
+    with span("SpGEMM", kind="phase", phase="ring", pc=pc,
+              stages_per_call=g) as sp:
+        cc, cv, ovf = sp.set_output(
+            fm(a_sk.cols, a_sk.vals, b_sk.cols, b_sk.vals)
+        )
+    cm = EllMatrix(cols=cc, vals=cv, n_cols=n_cols_out)
     fused = False
     if resolved == "pallas":
         from ..kernels.spgemm.ops import fused_path_fits
@@ -550,7 +591,7 @@ def summa_ring(
         )
     from ..kernels.spgemm.ops import hbm_round_trips
 
-    stats = {
+    stats = validated({
         "summa_algorithm": "ring",
         "summa_stages": pc,
         "summa_backend": resolved if fused else "reference",
@@ -558,7 +599,7 @@ def summa_ring(
         "exchange_rounds_summa": acct["rounds"],
         "spgemm_hbm_round_trips": hbm_round_trips(pc, g) if fused else pc,
         "spgemm_hbm_round_trips_reference": pc,
-    }
+    }, context="summa_ring", require_groups=("summa_exchange",))
     return (
         DistEll(mat=cm, mesh=mesh, row_axes=a.row_axes, col_axis=col_axis),
         ovf,
@@ -629,22 +670,25 @@ def overlap_spgemm_shard_map(
 
     a_pad, n_rows = pad_rows(a)
     b_pad, _ = pad_rows(b)
-    da, ovf_da = distribute_ell_blocks(
-        a_pad, block_capacity=a.capacity, semiring=operand_semiring,
-        mesh=mesh, row_axes=row_axes, col_axis=col_axis,
-    )
-    db, ovf_db = distribute_ell_blocks(
-        b_pad, block_capacity=b.capacity, semiring=operand_semiring,
-        mesh=mesh, row_axes=row_axes, col_axis=col_axis,
-    )
+    with span("SpGEMM", kind="phase", phase="distribute") as sp:
+        da, ovf_da = distribute_ell_blocks(
+            a_pad, block_capacity=a.capacity, semiring=operand_semiring,
+            mesh=mesh, row_axes=row_axes, col_axis=col_axis,
+        )
+        db, ovf_db = distribute_ell_blocks(
+            b_pad, block_capacity=b.capacity, semiring=operand_semiring,
+            mesh=mesh, row_axes=row_axes, col_axis=col_axis,
+        )
+        sp.set_output((da.mat.cols, db.mat.cols))
     cd, ovf_ring, stats = summa_ring(
         da, db, semiring=semiring, out_block_capacity=capacity,
         backend=backend, stages_per_call=stages_per_call,
     )
-    g = collect(cd)
-    mc, mv, mo = merge_sorted_rows(
-        g.cols, g.vals, capacity=capacity, semiring=semiring
-    )
+    with span("SpGEMM", kind="phase", phase="collect_merge"):
+        g = collect(cd)
+        mc, mv, mo = merge_sorted_rows(
+            g.cols, g.vals, capacity=capacity, semiring=semiring
+        )
     out = EllMatrix(
         cols=mc[:n_rows],
         vals=jax.tree.map(lambda v: v[:n_rows], mv),
@@ -840,11 +884,8 @@ def dist_transitive_reduction_ring(
     nnz_cur = int(jnp.sum(r.mat.cols >= 0))
     prev = -1
     it = 0
-    stats = {
-        "exchange_words_summa": 0,
-        "exchange_rounds_summa": 0,
-        "summa_algorithm": None,
-    }
+    stats = {**schema.zero_defaults("summa_exchange"),
+             "summa_algorithm": None}
     while nnz_cur != prev and it < max_iters:
         n_sq, _, st = summa_ring(
             cur, cur, semiring=MPSR, out_block_capacity=n_block_capacity,

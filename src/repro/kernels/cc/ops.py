@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from ...core.backend import register_op
 from ...core.spmat import next_pow2
+from ...obs.trace import span
 from .cc import cc_rounds_pallas
 from .ref import cc_labels_ref
 
@@ -148,17 +149,20 @@ def cc_labels_pallas(
         max_iters = n
     cols_t = transpose_ell(cols)
     k_in = cols_t.shape[1]
-    if _resident_bytes(n, k, k_in) > VMEM_BUDGET_BYTES:
-        return cc_labels_ref(cols, max_iters=max_iters)
-    rounds = max(1, min(rounds_per_call, max_iters))
-    n_chunks = max_iters // rounds
-    rem = max_iters % rounds
-    lab, iters, _ = _drive_chunks(
-        cols.reshape(1, -1), cols_t.reshape(1, -1),
-        jnp.arange(n, dtype=jnp.int32).reshape(1, n),
-        rounds=rounds, n_chunks=n_chunks, rem=rem, interpret=interpret,
-    )
-    return lab.reshape(-1), iters
+    fused = _resident_bytes(n, k, k_in) <= VMEM_BUDGET_BYTES
+    with span("kernel_launch", kind="kernel", kernel="cc_labels",
+              fused=fused, n=n, k_out=k, k_in=k_in):
+        if not fused:
+            return cc_labels_ref(cols, max_iters=max_iters)
+        rounds = max(1, min(rounds_per_call, max_iters))
+        n_chunks = max_iters // rounds
+        rem = max_iters % rounds
+        lab, iters, _ = _drive_chunks(
+            cols.reshape(1, -1), cols_t.reshape(1, -1),
+            jnp.arange(n, dtype=jnp.int32).reshape(1, n),
+            rounds=rounds, n_chunks=n_chunks, rem=rem, interpret=interpret,
+        )
+        return lab.reshape(-1), iters
 
 
 def hbm_round_trips(iters: int, rounds_per_call: int = 8) -> int:

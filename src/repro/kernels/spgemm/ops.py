@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from ...core.backend import register_op
 from ...core.semiring import Semiring
+from ...obs.trace import span
 from .ref import spgemm_ring_stages_ref
 from .spgemm import spgemm_ring_stages_pallas as _pallas_raw
 
@@ -106,16 +107,20 @@ def spgemm_ring_stages_pallas(
     """Pallas backend of the ``spgemm_ring_stages`` op: the fused kernel with
     the VMEM-budget fallback.  Bit-identical stage buffers and overflow
     counts to :func:`~repro.kernels.spgemm.ref.spgemm_ring_stages_ref`."""
-    if not fused_path_fits(a_cols, a_vals, b_cols, b_vals,
-                           capacity=capacity, semiring=semiring):
-        return spgemm_ring_stages_ref(
+    fused = fused_path_fits(a_cols, a_vals, b_cols, b_vals,
+                            capacity=capacity, semiring=semiring)
+    with span("kernel_launch", kind="kernel", kernel="spgemm_ring_stages",
+              fused=fused, stages=int(a_cols.shape[0]),
+              rows=int(a_cols.shape[1])):
+        if not fused:
+            return spgemm_ring_stages_ref(
+                offsets, a_cols, a_vals, b_cols, b_vals, semiring=semiring,
+                capacity=capacity, n_cols_out=n_cols_out,
+            )
+        return _pallas_raw(
             offsets, a_cols, a_vals, b_cols, b_vals, semiring=semiring,
-            capacity=capacity, n_cols_out=n_cols_out,
+            capacity=capacity, n_cols_out=n_cols_out, interpret=interpret,
         )
-    return _pallas_raw(
-        offsets, a_cols, a_vals, b_cols, b_vals, semiring=semiring,
-        capacity=capacity, n_cols_out=n_cols_out, interpret=interpret,
-    )
 
 
 def hbm_round_trips(stages: int, stages_per_call: int = 4) -> int:

@@ -1,0 +1,32 @@
+"""Observability layer: span tracing, typed metrics, trace export.
+
+Three pieces (docs/observability.md):
+
+* ``obs.trace`` — hierarchical :func:`span` timing with device sync on
+  exit; the single timing code path for pipeline stages, shard_map phases
+  and kernel launches.
+* ``obs.schema`` / ``obs.metrics`` — the declared metric registry and the
+  validating :class:`Metrics` accumulator the stats dicts emit through.
+* ``obs.export`` — Chrome trace-event / Perfetto JSON artifact writer.
+"""
+
+from .trace import Span, Tracer, current_tracer, span, sync, tracing
+from .metrics import Metrics, MetricsError, validated
+from .export import span_tree, to_chrome_trace, write_chrome_trace
+from . import schema
+
+__all__ = [
+    "Span",
+    "Tracer",
+    "current_tracer",
+    "span",
+    "sync",
+    "tracing",
+    "Metrics",
+    "MetricsError",
+    "validated",
+    "schema",
+    "span_tree",
+    "to_chrome_trace",
+    "write_chrome_trace",
+]

@@ -1,0 +1,96 @@
+"""Typed metrics registry: the emit surface over ``obs.schema``.
+
+A :class:`Metrics` instance is a validating accumulator the pipeline and its
+sub-stages write through instead of assigning into a bare dict.  Every
+:meth:`Metrics.emit` checks the key against the declared schema (registered
+name, kind-compatible value) at write time — so an unregistered or
+mistyped stat fails where it is emitted, not in a downstream test — and
+:meth:`Metrics.as_dict` returns the plain dict shape every existing
+consumer (benchmarks, tests, JSON artifacts) already expects: the
+compatibility shim that keeps ``AssemblyResult.stats`` and
+``ContigSet.stats`` ordinary dicts.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping, Optional
+
+from . import schema
+
+
+class MetricsError(ValueError):
+    """An emission violated the declared schema (unknown key / wrong kind)."""
+
+
+class Metrics:
+    """Schema-validated stats accumulator with a dict-compatible view.
+
+    ``strict=True`` (the default) raises :class:`MetricsError` on the first
+    violation; ``strict=False`` collects violations in :attr:`violations`
+    instead (used by tests that probe the contract itself)."""
+
+    def __init__(self, *, context: str = "stats", strict: bool = True):
+        self._values: Dict[str, Any] = {}
+        self.context = context
+        self.strict = strict
+        self.violations: list = []
+
+    def _check(self, name: str, value: Any) -> None:
+        s = schema.SCHEMA.get(name)
+        if s is None:
+            msg = f"{self.context}: unregistered stats key {name!r}"
+        elif not schema._kind_ok(s.kind, value):
+            msg = (f"{self.context}: {name} = {value!r} is not a valid "
+                   f"{s.kind} ({s.unit})")
+        else:
+            return
+        if self.strict:
+            raise MetricsError(msg)
+        self.violations.append(msg)
+
+    def emit(self, name: str, value: Any) -> Any:
+        """Record one metric value (validated against the schema);
+        returns ``value`` so emission can wrap an expression in place."""
+        self._check(name, value)
+        self._values[name] = value
+        return value
+
+    def emit_many(self, values: Mapping[str, Any]) -> None:
+        """Record every ``(name, value)`` of a mapping, each validated."""
+        for name, value in values.items():
+            self.emit(name, value)
+
+    def seed_zero(self, zero_group: str) -> None:
+        """Seed a present-and-zero group: every key of ``zero_group`` is set
+        to 0 unless already emitted — the one place the presence half of the
+        contract is enforced (DESIGN.md §2.10)."""
+        for key, zero in schema.zero_defaults(zero_group).items():
+            self._values.setdefault(key, zero)
+
+    def get(self, name: str, default: Any = None) -> Any:
+        """The recorded value for ``name`` (or ``default``)."""
+        return self._values.get(name, default)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._values
+
+    def __getitem__(self, name: str) -> Any:
+        return self._values[name]
+
+    def as_dict(self) -> Dict[str, Any]:
+        """The plain-dict compatibility view (a copy, insertion-ordered)."""
+        return dict(self._values)
+
+
+def validated(stats: Mapping[str, Any], *, context: str = "stats",
+              require_groups: tuple = ()) -> Dict[str, Any]:
+    """Validate a ready-made stats dict against the schema and return it as
+    a plain dict; raises :class:`MetricsError` on any violation.  The
+    one-shot form of :class:`Metrics` for emitters that already assemble
+    their stats in one expression."""
+    problems = schema.validate_stats(
+        stats, context=context, require_groups=require_groups
+    )
+    if problems:
+        raise MetricsError("; ".join(problems))
+    return dict(stats)

@@ -296,9 +296,9 @@ def test_exchange_stats_present_and_zero_without_explicit_exchange():
     n, edges = SCENARIOS["linear"]
     codes, lengths = _reads(n)
     s = string_matrix_from_edges(n, edges)
-    keys = ("exchange_words", "exchange_rounds", "exchange_words_cut",
-            "exchange_words_doubling", "exchange_words_sort",
-            "exchange_rounds_doubling", "exchange_rounds_sort")
+    from repro.obs import schema
+
+    keys = schema.group_keys("contig_exchange")
     ref = generate_contigs(s, codes, lengths, backend="reference")
     dev = generate_contigs(s, codes, lengths, backend="pallas",
                            distribution="gspmd")

@@ -78,6 +78,12 @@ C_loc, ovf_loc = spgemm(R, R, semiring=SR, capacity=16)
 assert ell_equal(C_host, C_loc)
 assert int(ovf_host) == int(ovf_loc)
 
+# every stats key registered + summa_exchange group complete (the key-set
+# contract itself lives in repro.obs.schema; values asserted below)
+from repro.obs import schema
+assert schema.validate_stats(st, context="summa_ring",
+                             require_groups=("summa_exchange",)) == []
+
 # measured == model, exactly (5 words/slot: col id + (4,) f32 suffixes)
 assert st["summa_algorithm"] == "ring"
 assert st["summa_stages"] == 2
