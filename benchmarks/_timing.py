@@ -1,37 +1,58 @@
-"""Shared benchmark timing: one untimed warmup + timed steady-state reps.
+"""Shared benchmark timing: compile/steady split + HBM watermark.
 
 Every snapshot benchmark used to fold the first (compiling) call into its
 reported wall-clock, which made compile-dominated rows — e.g. a per-call
 ``jax.jit`` rebuild — indistinguishable from genuinely slow steady state.
 :func:`timed` separates the two: the first call is measured on its own
 (``compile_us``: XLA compile + one execution), then ``reps`` further calls
-are averaged for the steady-state figure.  ``benchmarks/run.py`` carries the
-pair into the JSON records as ``ms`` / ``compile_ms``, and
-``scripts/check_bench_regression.py`` refuses to ratio-compare against
-baseline rows that predate the split (no ``compile_ms`` field).
+are averaged for the steady-state figure.  The whole window additionally
+runs under an ``obs.memory`` watermark, so every row also reports its
+device-memory high-water mark (``peak_hbm_bytes``) and the sampling path
+that produced it (``hbm_source``) — HBM capacity is the genome-size
+ceiling, so "smaller" is tracked next to "faster" in every record.
+
+``benchmarks/run.py`` and ``benchmarks/engine.py`` carry the fields into
+the JSON records as ``ms`` / ``compile_ms`` / ``peak_hbm_bytes``, and
+``scripts/check_bench_regression.py`` gates on both the time and memory
+trajectories.
 """
 
 from __future__ import annotations
 
 import time
+from typing import Any, NamedTuple
 
 
-def timed(f, out_of=lambda r: r, reps: int = 3):
-    """Time ``f``: returns ``(result, steady_us, compile_us)``.
+class Timing(NamedTuple):
+    """One :func:`timed` measurement (named so call sites stay readable)."""
+
+    result: Any
+    steady_us: float
+    compile_us: float
+    peak_hbm_bytes: int
+    hbm_source: str
+
+
+def timed(f, out_of=lambda r: r, reps: int = 3) -> Timing:
+    """Time ``f`` under a device-memory watermark.
 
     ``out_of`` selects what to device-sync from ``f``'s result (any pytree,
     dataclasses included — synced via :func:`repro.obs.sync`, the same
     block-until-ready path the pipeline's stage spans use).  ``compile_us``
     is the wall-clock of the first call (compile + one execution);
-    ``steady_us`` averages ``reps`` subsequent calls."""
-    from repro.obs import sync
+    ``steady_us`` averages ``reps`` subsequent calls; ``peak_hbm_bytes`` is
+    the high-water mark over all ``reps + 1`` calls (``obs.memory``, with
+    the live-buffer fallback on backends without ``memory_stats``)."""
+    from repro.obs import sample, sync, watermark
 
-    t0 = time.perf_counter()
-    res = f()
-    sync(out_of(res))
-    compile_us = (time.perf_counter() - t0) * 1e6
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        sync(out_of(f()))
-    steady_us = (time.perf_counter() - t0) / reps * 1e6
-    return res, steady_us, compile_us
+    with watermark() as wm:
+        t0 = time.perf_counter()
+        res = f()
+        sync(out_of(res))
+        compile_us = (time.perf_counter() - t0) * 1e6
+        sample()  # post-call sample point (live-buffer fallback granularity)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            sync(out_of(f()))
+        steady_us = (time.perf_counter() - t0) / reps * 1e6
+    return Timing(res, steady_us, compile_us, wm.peak_hbm_bytes, wm.source)

@@ -36,7 +36,8 @@ def run(backends=("reference", "pallas"), sweep=(256, 1024, 4096)):
                     cset, codes, lengths, backend=backend, min_depth=2
                 )
 
-            cres, us, cus = timed(f, out_of=lambda r: r.codes)
+            t = timed(f, out_of=lambda r: r.codes)
+            cres, us = t.result, t.steady_us
             if backend == "reference":
                 base = us
             derived = (
@@ -46,7 +47,8 @@ def run(backends=("reference", "pallas"), sweep=(256, 1024, 4096)):
             )
             if base is not None and backend != "reference":
                 derived += f";speedup_vs_reference={base / us:.1f}x"
-            rows.append((f"consensus[{backend}]/n{n}", us, derived, cus))
+            rows.append((f"consensus[{backend}]/n{n}", us, derived,
+                         t.compile_us, t.peak_hbm_bytes, t.hbm_source))
     return rows
 
 

@@ -72,13 +72,14 @@ def run(backends=("reference", "pallas"), sweep=(256, 1024, 4096),
         for backend in backends:
             dists = distributions if backend != "reference" else ("gspmd",)
             for dist in dists:
-                cset, us, cus = timed(
+                t = timed(
                     lambda: generate_contigs(
                         s, codes, lengths, backend=backend,
                         distribution=dist, mesh=mesh,
                     ),
                     out_of=lambda c: c.codes,
                 )
+                cset, us = t.result, t.steady_us
                 if backend == "reference":
                     base = us
                 derived = f"n_contigs={cset.n_contigs}"
@@ -100,7 +101,8 @@ def run(backends=("reference", "pallas"), sweep=(256, 1024, 4096),
                         f";model_words_sort={model_sort}"
                     )
                 tag = backend if dist == "gspmd" else f"{backend}/{dist}"
-                rows.append((f"contigs[{tag}]/n{n}", us, derived, cus))
+                rows.append((f"contigs[{tag}]/n{n}", us, derived,
+                             t.compile_us, t.peak_hbm_bytes, t.hbm_source))
 
         # fused cc kernel vs oracle on the same state graph.  The pallas
         # backend falls back to the oracle above its VMEM budget — then its
@@ -108,10 +110,11 @@ def run(backends=("reference", "pallas"), sweep=(256, 1024, 4096),
         g = expand_states(s)
         fused = bool(fused_path_fits(g.cols))
         for backend in backends:
-            (labels, iters), us, cus = timed(
+            t = timed(
                 lambda: connected_components(g, backend=backend),
                 out_of=lambda r: r[0],
             )
+            (labels, iters), us = t.result, t.steady_us
             if backend == "reference" or not fused:
                 trips = int(iters)
             else:
@@ -120,7 +123,7 @@ def run(backends=("reference", "pallas"), sweep=(256, 1024, 4096),
                 f"cc[{backend}]/n{n}", us,
                 f"iters={int(iters)};hbm_round_trips={trips}"
                 + ("" if backend == "reference" else f";fused={fused}"),
-                cus,
+                t.compile_us, t.peak_hbm_bytes, t.hbm_source,
             ))
     return rows
 

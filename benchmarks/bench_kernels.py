@@ -12,20 +12,11 @@ Standalone: ``python -m benchmarks.bench_kernels --backend both``.
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-
-def _time_us(f, *, warmup: int = 1, iters: int = 3) -> float:
-    for _ in range(warmup):
-        jax.block_until_ready(f())
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        jax.block_until_ready(f())
-    return (time.perf_counter() - t0) / iters * 1e6
+from ._timing import timed
 
 
 def _resolve_backends(backend: str):
@@ -57,14 +48,17 @@ def run(backend: str = "both"):
     mat, _ = from_coo(jnp.asarray(r_), jnp.asarray(c_), jnp.asarray(vals),
                       jnp.asarray(r_ != c_), n_rows=n, n_cols=n,
                       capacity=3 * deg, semiring=SR)
-    t_sp = _time_us(
+    t_spt = timed(
         jax.jit(lambda: spgemm(mat, mat, semiring=SR, capacity=64)[0].cols)
     )
+    t_sp = t_spt.steady_us
     dense_ref = dispatch("minplus_dense", "reference")
     dense = mat.to_dense(SR)
-    t_d = _time_us(jax.jit(lambda: dense_ref(dense, dense)), iters=1)
+    t_dt = timed(jax.jit(lambda: dense_ref(dense, dense)), reps=1)
+    t_d = t_dt.steady_us
     rows.append(("kernels/ell_spgemm_minplus_n1024", t_sp,
-                 f"dense_ref={t_d:.0f}us;sparse_speedup={t_d / t_sp:.1f}x"))
+                 f"dense_ref={t_d:.0f}us;sparse_speedup={t_d / t_sp:.1f}x",
+                 t_spt.compile_us, t_spt.peak_hbm_bytes, t_spt.hbm_source))
 
     # --- minplus_dense backend axis ---
     m = 256
@@ -74,14 +68,17 @@ def run(backend: str = "both"):
     mp_times = {}
     for be in backends:
         f = dispatch("minplus_dense", be)
-        mp_times[be] = _time_us(jax.jit(lambda f=f: f(a, a)))
+        t = timed(jax.jit(lambda f=f: f(a, a)))
+        mp_times[be] = t.steady_us
         mode = ("interpret" if be == "pallas" and resolve_interpret("auto")
                 else "compiled")
         rows.append((f"kernels/minplus_dense_{m}[{be}]", mp_times[be],
-                     f"mode={mode}"))
+                     f"mode={mode}", t.compile_us, t.peak_hbm_bytes,
+                     t.hbm_source))
     if len(mp_times) == 2:
         rows.append(("kernels/minplus_dense_speedup", 0.0,
-                     f"ref/pallas={mp_times['reference'] / mp_times['pallas']:.2f}x"))
+                     f"ref/pallas={mp_times['reference'] / mp_times['pallas']:.2f}x",
+                     0.0, t.peak_hbm_bytes, t.hbm_source))
 
     # --- xdrop_extend backend axis (seed-and-extend via batch_extend) ---
     e2, l = 128, 600
@@ -94,12 +91,15 @@ def run(backend: str = "both"):
     for be in backends:
         f = jax.jit(lambda be=be: batch_extend(
             *args, k=15, band=33, max_steps=1200, backend=be).score)
-        xd_times[be] = _time_us(f)
+        t = timed(f)
+        xd_times[be] = t.steady_us
         rows.append((f"kernels/xdrop_align_{e2}x{l}bp[{be}]", xd_times[be],
-                     f"pairs_per_s={e2 / (xd_times[be] / 1e6):.0f}"))
+                     f"pairs_per_s={e2 / (xd_times[be] / 1e6):.0f}",
+                     t.compile_us, t.peak_hbm_bytes, t.hbm_source))
     if len(xd_times) == 2:
         rows.append(("kernels/xdrop_align_speedup", 0.0,
-                     f"ref/pallas={xd_times['reference'] / xd_times['pallas']:.2f}x"))
+                     f"ref/pallas={xd_times['reference'] / xd_times['pallas']:.2f}x",
+                     0.0, t.peak_hbm_bytes, t.hbm_source))
     return rows
 
 
@@ -111,7 +111,7 @@ def main() -> None:
                    choices=["reference", "pallas", "auto", "both"])
     ns = p.parse_args()
     print("name,us_per_call,derived")
-    for name, us, derived in run(backend=ns.backend):
+    for name, us, derived, *_ in run(backend=ns.backend):
         print(f"{name},{us:.1f},{derived}", flush=True)
 
 

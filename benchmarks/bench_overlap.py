@@ -85,7 +85,8 @@ def _ring_rows(a, at, n_reads, cap):
             capacity=cap, mesh=mesh)
         return c, st
 
-    (c, st), t_ring, t_compile = timed(call, out_of=lambda r: r[0].cols)
+    t = timed(call, out_of=lambda r: r[0].cols)
+    (c, st), t_ring = t.result, t.steady_us
 
     n_pad = -(-n_reads // pr) * pr
     m_rows = at.cols.shape[0]
@@ -102,7 +103,7 @@ def _ring_rows(a, at, n_reads, cap):
                f";hbm_round_trips={st.get('spgemm_hbm_round_trips', 0)}"
                f";nnzC={int(c.nnz())}")
     return [(f"overlap[shard_map]/ring_{pr}x{pc}", t_ring, derived,
-             t_compile)]
+             t.compile_us, t.peak_hbm_bytes, t.hbm_source)]
 
 
 def run(distributions=("local",), genome=10_000):
@@ -119,10 +120,12 @@ def run(distributions=("local",), genome=10_000):
         return rows
 
     f2d = jax.jit(lambda: spgemm(a, at, semiring=OV, capacity=64))
-    (c2d, _), t_2d, c_2d = timed(f2d, out_of=lambda r: r[0].cols)
+    t2 = timed(f2d, out_of=lambda r: r[0].cols)
+    (c2d, _), t_2d = t2.result, t2.steady_us
 
     f1d = jax.jit(lambda: _outer_product_1d(at, n, 64))
-    c1d, t_1d, c_1d = timed(f1d, out_of=lambda r: r.cols)
+    t1 = timed(f1d, out_of=lambda r: r.cols)
+    c1d, t_1d = t1.result, t1.steady_us
 
     # same candidate pairs?
     same = int(jnp.sum((c2d.cols >= 0) != (c1d.cols >= 0)))
@@ -133,9 +136,11 @@ def run(distributions=("local",), genome=10_000):
     w1d = (am / m_real) * am / p if m_real else 0
     w2d = am / (p ** 0.5)
     rows += [
-        ("overlap/2d_spgemm", t_2d, f"nnzC={int(c2d.nnz())}", c_2d),
+        ("overlap/2d_spgemm", t_2d, f"nnzC={int(c2d.nnz())}",
+         t2.compile_us, t2.peak_hbm_bytes, t2.hbm_source),
         ("overlap/1d_outer_product", t_1d,
-         f"pattern_mismatches={same};speedup_2d={t_1d / t_2d:.2f}x", c_1d),
+         f"pattern_mismatches={same};speedup_2d={t_1d / t_2d:.2f}x",
+         t1.compile_us, t1.peak_hbm_bytes, t1.hbm_source),
         ("overlap/model_words_P1024", 0.0,
          f"W1D={w1d:.3e};W2D={w2d:.3e}", 0.0),
     ]

@@ -1,7 +1,9 @@
 """Fig. 4 analogue: strong scaling of the distributed TR across host-device
 counts (subprocess per device count — jax locks the device count at init).
 A CPU-host proxy for the paper's node scaling; the roofline table in
-EXPERIMENTS.md §Roofline carries the production-mesh story."""
+EXPERIMENTS.md §Roofline carries the production-mesh story.  Each
+subprocess reports the compile/steady split and its HBM watermark, so the
+scaling rows carry the same record fields as every other module."""
 
 from __future__ import annotations
 
@@ -16,11 +18,12 @@ from repro.core.semiring import minplus_orient_semiring as SR
 from repro.core.spmat import from_coo
 from repro.core.summa import distribute_ell, dist_transitive_reduction
 from repro.launch.mesh import make_test_mesh
+from repro.obs import watermark
 
 shape = {mesh_shape}
 mesh = make_test_mesh(shape)
 rng = np.random.default_rng(0)
-n, deg = 4096, 8
+n, deg = {n}, 8
 e = n * deg
 rows = rng.integers(0, n, e); cols = rng.integers(0, n, e)
 combos = rng.integers(0, 4, e)
@@ -32,34 +35,46 @@ Rd, _ = distribute_ell(jnp.asarray(rows), jnp.asarray(cols),
                        jnp.asarray(vals), jnp.asarray(ok), n_rows=n,
                        n_cols=n, block_capacity=3 * deg, semiring=SR,
                        mesh=mesh)
-dist_transitive_reduction(Rd, fuzz=100.0, fused=True)  # compile
-t0 = time.perf_counter()
-for _ in range(3):
+with watermark() as wm:
+    t0 = time.perf_counter()
     out, it, nnz = dist_transitive_reduction(Rd, fuzz=100.0, fused=True)
     nnz.block_until_ready()
-print((time.perf_counter() - t0) / 3 * 1e6)
+    compile_us = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    for _ in range(3):
+        out, it, nnz = dist_transitive_reduction(Rd, fuzz=100.0, fused=True)
+        nnz.block_until_ready()
+    steady_us = (time.perf_counter() - t0) / 3 * 1e6
+print(f"{{steady_us}} {{compile_us}} {{wm.peak_hbm_bytes}} {{wm.source}}")
 """
 
 
-def run():
+def run(shapes=((1, 1), (2, 1), (2, 2)), n=4096):
+    """One subprocess per mesh shape; rows report steady-state wall-clock,
+    parallel efficiency vs the P=1 base, and the per-subprocess compile
+    time + HBM watermark parsed from the child's stdout."""
     src = os.path.join(os.path.dirname(__file__), "..", "src")
     rows = []
     base = None
-    for shape in ((1, 1), (2, 1), (2, 2)):
+    for shape in shapes:
         nd = shape[0] * shape[1]
         env = dict(os.environ)
         env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={nd}"
         env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
         r = subprocess.run(
-            [sys.executable, "-c", _SNIPPET.format(mesh_shape=shape)],
+            [sys.executable, "-c", _SNIPPET.format(mesh_shape=shape, n=n)],
             capture_output=True, text=True, env=env, timeout=560,
         )
         if r.returncode != 0:
-            rows.append((f"scaling/P{nd}", float("nan"), "FAILED"))
+            rows.append((f"scaling/P{nd}", float("nan"), "FAILED", 0.0, 0,
+                         "live_buffers"))
             continue
-        us = float(r.stdout.strip().splitlines()[-1])
+        parts = r.stdout.strip().splitlines()[-1].split()
+        us, compile_us = float(parts[0]), float(parts[1])
+        peak, source = int(parts[2]), parts[3]
         if base is None:
             base = us
         rows.append((f"scaling/P{nd}", us,
-                     f"efficiency={base / (us * nd):.2f}"))
+                     f"efficiency={base / (us * nd):.2f}", compile_us,
+                     peak, source))
     return rows

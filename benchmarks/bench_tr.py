@@ -11,8 +11,9 @@ from __future__ import annotations
 import time
 
 import numpy as np
-import jax
 import jax.numpy as jnp
+
+from ._timing import timed
 
 
 def _graph(n, avg_deg, seed):
@@ -34,15 +35,11 @@ def _graph(n, avg_deg, seed):
     return mat
 
 
-def _time(f, reps=3):
-    f()  # compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        jax.block_until_ready(jax.tree.leaves(f())[0])
-    return (time.perf_counter() - t0) / reps * 1e6
-
-
-def run():
+def run(sweep=(256, 1024, 4096, 16384), avg_deg=8):
+    """One row per (n, variant); semiring rows carry the compile/steady
+    split and the HBM watermark via :func:`benchmarks._timing.timed`; the
+    host-Python baselines (Myers, dense square) have no XLA compile, so
+    their ``compile_us`` is genuinely 0."""
     from repro.core.myers_baseline import (
         dense_square_transitive_reduction, from_ell,
         myers_transitive_reduction,
@@ -50,29 +47,39 @@ def run():
     from repro.core.transitive_reduction import (
         transitive_reduction, transitive_reduction_fused,
     )
+    from repro.obs import watermark
 
     rows = []
-    for n, deg in ((256, 8), (1024, 8), (4096, 8), (16384, 8)):
-        r = _graph(n, deg, seed=n)
+    for n in sweep:
+        r = _graph(n, avg_deg, seed=n)
         edges = from_ell(r)
 
-        t_fused = _time(lambda: transitive_reduction_fused(r, fuzz=100.0)[0])
-        t_faith = _time(lambda: transitive_reduction(r, fuzz=100.0)[0])
-        t0 = time.perf_counter()
-        myers_transitive_reduction(edges, fuzz=100.0)
-        t_myers = (time.perf_counter() - t0) * 1e6
-        if n <= 256:  # O(n^3) — CPU-feasible only at toy sizes
+        tf = timed(lambda: transitive_reduction_fused(r, fuzz=100.0)[0],
+                   out_of=lambda m: m.cols)
+        tt = timed(lambda: transitive_reduction(r, fuzz=100.0)[0],
+                   out_of=lambda m: m.cols)
+        with watermark() as wm_myers:
             t0 = time.perf_counter()
-            dense_square_transitive_reduction(edges, n, fuzz=100.0)
-            t_dense = (time.perf_counter() - t0) * 1e6
+            myers_transitive_reduction(edges, fuzz=100.0)
+            t_myers = (time.perf_counter() - t0) * 1e6
+        if n <= 256:  # O(n^3) — CPU-feasible only at toy sizes
+            with watermark() as wm_dense:
+                t0 = time.perf_counter()
+                dense_square_transitive_reduction(edges, n, fuzz=100.0)
+                t_dense = (time.perf_counter() - t0) * 1e6
+            dense_peak, dense_src = wm_dense.peak_hbm_bytes, wm_dense.source
         else:
-            t_dense = float("nan")
+            t_dense, dense_peak, dense_src = float("nan"), 0, "live_buffers"
         rows += [
-            (f"tr/n{n}/semiring_fused", t_fused,
-             f"speedup_vs_myers={t_myers / t_fused:.1f}x"),
-            (f"tr/n{n}/semiring_faithful", t_faith,
-             f"speedup_vs_myers={t_myers / t_faith:.1f}x"),
-            (f"tr/n{n}/myers_sequential", t_myers, ""),
-            (f"tr/n{n}/dense_square", t_dense, ""),
+            (f"tr/n{n}/semiring_fused", tf.steady_us,
+             f"speedup_vs_myers={t_myers / tf.steady_us:.1f}x",
+             tf.compile_us, tf.peak_hbm_bytes, tf.hbm_source),
+            (f"tr/n{n}/semiring_faithful", tt.steady_us,
+             f"speedup_vs_myers={t_myers / tt.steady_us:.1f}x",
+             tt.compile_us, tt.peak_hbm_bytes, tt.hbm_source),
+            (f"tr/n{n}/myers_sequential", t_myers, "", 0.0,
+             wm_myers.peak_hbm_bytes, wm_myers.source),
+            (f"tr/n{n}/dense_square", t_dense, "", 0.0, dense_peak,
+             dense_src),
         ]
     return rows

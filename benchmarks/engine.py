@@ -1,0 +1,233 @@
+"""Persistent experiment engine CLI: cached runs + perf/memory trajectory.
+
+The incremental benchmark driver over the declarative registry in
+:mod:`repro.obs.experiments` (rtl-experiments ``framework.py`` style).
+Experiment ids fold in a **code fingerprint** (``benchmarks/`` +
+``src/repro`` sources, jax version, device count), so an untouched tree
+re-runs for free from ``.bench_cache/`` and any relevant edit invalidates
+exactly the affected entries.  Every fresh run appends its records to the
+append-only trajectory store ``bench/trajectory.jsonl`` (one line per
+experiment row per code snapshot — the successor of the one-file-per-PR
+``BENCH_<n>.json`` convention; old snapshots stay readable as history).
+All records carry ``ms``, ``compile_ms`` and ``peak_hbm_bytes``.
+
+Verbs::
+
+    python benchmarks/engine.py todo  [--smoke] [--check-empty]
+    python benchmarks/engine.py run   [--smoke] [--only contigs,tr] [--force]
+                                      [--json ALL.json] [--delta FRESH.json]
+    python benchmarks/engine.py report
+    python benchmarks/engine.py csv
+
+``todo`` lists pending (uncached-at-this-fingerprint) experiments;
+``--check-empty`` exits 1 when any are pending — the CI cache-hit gate runs
+it immediately after ``run`` and requires zero.  ``run`` executes only the
+pending set (cache hits are served instantly), so a second ``run --smoke``
+in an unchanged tree is pure cache reads.  ``report`` summarizes cache
+state per experiment; ``csv`` dumps every cached record.
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv as _csv
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+if __package__ in (None, ""):  # `python benchmarks/engine.py ...`
+    sys.path.insert(0, _ROOT)
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+try:
+    import repro  # noqa: F401  (PYTHONPATH=src already set)
+except ImportError:  # pragma: no cover - module-form without PYTHONPATH
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.obs.experiments import (  # noqa: E402
+    Experiment,
+    ExperimentEngine,
+    code_fingerprint,
+)
+
+#: sources the experiment ids depend on: any edit here re-runs the suite.
+_FINGERPRINT_PATHS = (
+    os.path.join(_ROOT, "benchmarks"),
+    os.path.join(_ROOT, "src", "repro"),
+)
+
+_CACHE_DIR = os.path.join(_ROOT, ".bench_cache")
+_TRAJECTORY = os.path.join(_ROOT, "bench", "trajectory.jsonl")
+
+
+def experiments(smoke: bool) -> list:
+    """The declarative experiment registry (one entry per module × axis).
+
+    The smoke set is the CI grid: reduced sizes, both backends, both
+    distributions where the axis exists.  The full set mirrors the paper
+    table/figure sizes of ``benchmarks/run.py``."""
+    if smoke:
+        return [
+            Experiment("contigs",
+                       {"sweep": (256,),
+                        "backends": ("reference", "pallas"),
+                        "distributions": ("gspmd",)},
+                       {"distribution": "gspmd"}),
+            Experiment("contigs",
+                       {"sweep": (256,), "backends": ("pallas",),
+                        "distributions": ("shard_map",)},
+                       {"distribution": "shard_map"}),
+            Experiment("consensus", {"sweep": (256,)}, {}),
+            Experiment("tr", {"sweep": (256,)}, {}),
+            Experiment("kernels", {"backend": "both"},
+                       {"backend": "both"}),
+            Experiment("overlap",
+                       {"distributions": ("shard_map",), "genome": 4_000},
+                       {"distribution": "shard_map"}),
+        ]
+    return [
+        Experiment("contigs",
+                   {"sweep": (256, 1024, 4096),
+                    "backends": ("reference", "pallas"),
+                    "distributions": ("gspmd", "shard_map")},
+                   {"distribution": "both"}),
+        Experiment("consensus", {"sweep": (256, 1024, 4096)}, {}),
+        Experiment("tr", {}, {}),
+        Experiment("kernels", {"backend": "both"}, {"backend": "both"}),
+        Experiment("sparsity", {}, {}),
+        Experiment("overlap",
+                   {"distributions": ("local", "shard_map")},
+                   {"distribution": "both"}),
+        Experiment("scaling", {}, {}),
+    ]
+
+
+def _run_experiment(exp: Experiment) -> list:
+    """Runner: execute one bench module and normalize its rows to records.
+
+    Reuses ``benchmarks.run._record`` (same name/op/backend/shape parsing
+    as the legacy snapshot path) and backfills memory columns from a
+    module-level watermark for rows that do not time through
+    ``_timing.timed`` — a record without ``compile_ms`` still fails
+    validation loudly in the engine."""
+    import importlib
+
+    from repro.obs import watermark
+
+    from benchmarks.run import _record
+
+    mod = importlib.import_module(f"benchmarks.bench_{exp.module}")
+    records = []
+    with watermark() as wm:
+        for name, us, derived, *extra in mod.run(**dict(exp.kwargs)):
+            records.append(_record(
+                name, us, derived,
+                compile_us=extra[0] if extra else None,
+                peak_hbm_bytes=extra[1] if len(extra) > 1 else None,
+                hbm_source=extra[2] if len(extra) > 2 else None,
+            ))
+    for rec in records:
+        rec.setdefault("peak_hbm_bytes", wm.peak_hbm_bytes)
+        rec.setdefault("hbm_source", wm.source)
+        rec["experiment"] = exp.label
+    return records
+
+
+def make_engine(smoke: bool, *, cache_dir: str = _CACHE_DIR,
+                trajectory: str = _TRAJECTORY) -> ExperimentEngine:
+    """Build the engine over the registry at the current code fingerprint
+    (sources + jax version + device count — topology changes the shard_map
+    rows, so it is part of the cache key)."""
+    import jax
+
+    fp = code_fingerprint(_FINGERPRINT_PATHS)
+    fingerprint = f"{fp}-jax{jax.__version__}-d{jax.device_count()}"
+    return ExperimentEngine(
+        experiments(smoke), _run_experiment,
+        cache_dir=cache_dir, trajectory_path=trajectory,
+        fingerprint=fingerprint,
+    )
+
+
+def main(argv=None) -> int:
+    """Dispatch one engine verb; returns the process exit status."""
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("verb", choices=["todo", "run", "report", "csv"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-size experiment set (reduced sweeps)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module keys (run verb)")
+    ap.add_argument("--force", action="store_true",
+                    help="re-run even on cache hits (run verb)")
+    ap.add_argument("--check-empty", action="store_true",
+                    help="todo: exit 1 when any experiment is pending "
+                         "(the CI cache-hit gate)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="run: write ALL records of this invocation "
+                         "(cache hits included) to PATH")
+    ap.add_argument("--delta", default=None, metavar="PATH",
+                    help="run: write only the freshly-run records to PATH "
+                         "(the trajectory delta artifact)")
+    ap.add_argument("--cache-dir", default=_CACHE_DIR)
+    ap.add_argument("--trajectory", default=_TRAJECTORY)
+    ns = ap.parse_args(argv)
+
+    eng = make_engine(ns.smoke, cache_dir=ns.cache_dir,
+                      trajectory=ns.trajectory)
+
+    if ns.verb == "todo":
+        pending = eng.todo()
+        for exp in pending:
+            print(f"pending {exp.label} ({eng.id_of(exp)})")
+        print(f"{len(pending)} pending experiment(s) "
+              f"[fingerprint {eng.fingerprint}]")
+        return 1 if (ns.check_empty and pending) else 0
+
+    if ns.verb == "run":
+        import json
+
+        only = set(ns.only.split(",")) if ns.only else None
+        if only is not None:
+            known = {e.module for e in eng.experiments}
+            unknown = only - known
+            if unknown:
+                ap.error(f"unknown --only keys {sorted(unknown)}; "
+                         f"known: {sorted(known)}")
+        out = eng.run(only=only, force=ns.force,
+                      log=lambda msg: print(msg, flush=True))
+        print("name,ms,compile_ms,peak_hbm_bytes,derived")
+        for rec in out["records"]:
+            print(f"{rec['name']},{rec['ms']:.3f},{rec['compile_ms']:.1f},"
+                  f"{rec['peak_hbm_bytes']},{rec['derived']}", flush=True)
+        print(f"# {len(out['ran'])} run, {len(out['hits'])} cache hit(s), "
+              f"{out['wall_s']:.1f}s wall", file=sys.stderr)
+        if ns.json:
+            with open(ns.json, "w") as f:
+                json.dump(out["records"], f, indent=1)
+        if ns.delta:
+            with open(ns.delta, "w") as f:
+                json.dump(out["fresh_records"], f, indent=1)
+        return 0
+
+    if ns.verb == "report":
+        for row in eng.report_rows():
+            wall = "-" if row["wall_s"] is None else f"{row['wall_s']:.1f}s"
+            print(f"{row['state']:8s} {row['experiment']:40s} "
+                  f"{row['records']:3d} record(s)  {wall}  {row['id']}")
+        pending = len(eng.todo())
+        print(f"# {len(eng.experiments) - pending} cached, "
+              f"{pending} pending", file=sys.stderr)
+        return 0
+
+    if ns.verb == "csv":
+        w = _csv.writer(sys.stdout)
+        for row in eng.csv_rows():
+            w.writerow(row)
+        return 0
+
+    return 2  # pragma: no cover - argparse restricts the verbs
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,11 +9,13 @@ per run).  ``ms`` is steady-state wall-clock (post-warmup average,
 first call (compile + one execution) — rows from modules that have not
 adopted the split omit the field.
 
-``--snapshot`` is the committed-artifact mode: it implies ``--smoke``,
-restricts to the snapshot module set (``_SNAPSHOT_ONLY``), and writes
-``BENCH_<n>.json`` at the repo root (README "Benchmark snapshots" documents
-the record format).  ``scripts/check_bench_regression.py`` diffs a fresh
-snapshot against the committed one.
+``--snapshot`` is the legacy committed-artifact mode: it implies
+``--smoke``, restricts to the snapshot module set (``_SNAPSHOT_ONLY``),
+and writes ``BENCH_<n>.json`` at the repo root.  The per-PR snapshot
+convention is superseded by the persistent experiment engine
+(``benchmarks/engine.py`` + ``bench/trajectory.jsonl`` — README
+"Experiment engine and the perf trajectory"); the committed ``BENCH_*``
+files remain readable history for ``scripts/check_bench_regression.py``.
 
 ``--trace-dir DIR`` additionally runs one small traced pipeline
 (``PipelineConfig.trace=True``, shard_map distribution) and writes the
@@ -78,7 +80,8 @@ def _modules():
     ]
 
 
-def _record(name, us, derived, compile_us=None):
+def _record(name, us, derived, compile_us=None, peak_hbm_bytes=None,
+            hbm_source=None):
     m = _NAME_RE.match(name)
     rec = {
         "name": name,
@@ -90,6 +93,10 @@ def _record(name, us, derived, compile_us=None):
     }
     if compile_us is not None:
         rec["compile_ms"] = compile_us / 1e3
+    if peak_hbm_bytes is not None:
+        rec["peak_hbm_bytes"] = int(peak_hbm_bytes)
+    if hbm_source is not None:
+        rec["hbm_source"] = hbm_source
     return rec
 
 
@@ -174,12 +181,27 @@ def main(argv=None) -> None:
                 kwargs = {k: v for k, v in _SMOKE.get(key, {}).items()
                           if k in accepted}
             try:
-                for name, us, derived, *extra in mod.run(**kwargs):
-                    print(f"{name},{us:.1f},{derived}", flush=True)
-                    records.append(_record(
-                        name, us, derived,
-                        compile_us=extra[0] if extra else None,
-                    ))
+                # per-module watermark backfills rows from modules that do
+                # not time through _timing.timed (analytic tables, the
+                # breakdown driver) so every record carries peak_hbm_bytes
+                from repro.obs import watermark
+
+                module_records = []
+                with watermark() as wm:
+                    for name, us, derived, *extra in mod.run(**kwargs):
+                        print(f"{name},{us:.1f},{derived}", flush=True)
+                        module_records.append(_record(
+                            name, us, derived,
+                            compile_us=extra[0] if extra else None,
+                            peak_hbm_bytes=(extra[1] if len(extra) > 1
+                                            else None),
+                            hbm_source=(extra[2] if len(extra) > 2
+                                        else None),
+                        ))
+                for rec in module_records:
+                    rec.setdefault("peak_hbm_bytes", wm.peak_hbm_bytes)
+                    rec.setdefault("hbm_source", wm.source)
+                records.extend(module_records)
             except Exception as exc:  # pragma: no cover
                 print(f"{label}/ERROR,nan,{type(exc).__name__}:{exc}",
                       flush=True)

@@ -1,21 +1,31 @@
 #!/usr/bin/env python
-"""Diff a fresh benchmark snapshot against committed ``BENCH_*.json`` ones.
+"""Gate fresh benchmark records against the perf/memory trajectory.
 
-Usage (CI calls this after regenerating the snapshot on the smoke grid)::
+Usage (CI calls this after ``benchmarks/engine.py run --smoke``)::
 
-    python scripts/check_bench_regression.py FRESH.json [PREVIOUS.json ...]
+    python scripts/check_bench_regression.py FRESH.json [BASELINE ...]
 
-The first argument is the freshly generated snapshot; every further argument
-is a previously committed trajectory file (``git ls-files 'BENCH_*.json'``).
-Rows are matched by ``name``.  A row regresses when its fresh wall-clock
-exceeds ``RATIO``× the *best* previous measurement of that row — a deliberate
-threshold far above runner noise, so only gross slowdowns (an accidental
-de-jit, a dropped fused path) fail CI while normal jitter passes.
+The first argument is the freshly generated record file; every further
+argument is a baseline — either the append-only trajectory store
+(``bench/trajectory.jsonl``, one JSON record per line) or a legacy
+``BENCH_<n>.json`` snapshot.  With no baselines given, the script
+auto-discovers ``bench/trajectory.jsonl`` at the repo root and falls back
+to the latest committed ``BENCH_<n>.json`` when the store is absent.
 
-Coverage is part of the contract: a baseline row that is *missing* from the
-fresh snapshot fails with a per-row message (a silently dropped benchmark
-must not read as "no regression").  Rows only in the fresh snapshot stay
-informational — the set is expected to grow per PR.
+Rows are matched by ``name``.  Two gates, both deliberately *gross* so
+runner noise passes and only real faults fail:
+
+* **time** — fresh wall-clock above ``RATIO``× the best previous ``ms``
+  of that row (an accidental de-jit, a dropped fused path);
+* **memory** — fresh ``peak_hbm_bytes`` above ``MEM_RATIO``× the best
+  (smallest) previous watermark of that row, with a ``MIN_BYTES`` floor
+  (a leaked buffer, a densified intermediate).  Rows whose baseline
+  predates memory telemetry simply skip this gate.
+
+Coverage is part of the contract: a baseline row that is *missing* from
+the fresh records fails with a per-row message (a silently dropped
+benchmark must not read as "no regression").  Rows only in the fresh set
+stay informational — the set is expected to grow per PR.
 
 Baselines that predate the warmup/steady-state split (records without a
 ``compile_ms`` field — their ``ms`` folds XLA compile into wall-clock) are
@@ -23,13 +33,16 @@ Baselines that predate the warmup/steady-state split (records without a
 measurement against a compile-dominated baseline would pass trivially and
 mask real regressions behind a meaningless headroom.
 
-Exit status: 0 = no gross regression and full coverage, 1 = a row regressed
-or disappeared, 2 = usage error.
+Exit status: 0 = no gross regression and full coverage, 1 = a row
+regressed or disappeared, 2 = usage error.
 """
 
 from __future__ import annotations
 
+import glob
 import json
+import os
+import re
 import sys
 
 # fresh ms must stay below RATIO x best previous ms for the same row name
@@ -39,54 +52,135 @@ RATIO = 5.0
 # ratio test measures timer noise, not the benchmark
 MIN_MS = 1.0
 
+# fresh peak_hbm_bytes must stay below MEM_RATIO x the smallest previous
+# watermark for the same row name
+MEM_RATIO = 2.0
+
+# watermarks below this on both sides are skipped: small pools churn with
+# allocator noise, not with the benchmark's working set
+MIN_BYTES = 1 << 20
+
+
+def _rows(path: str):
+    """Yield record dicts from a ``.json`` snapshot or ``.jsonl`` store."""
+    with open(path) as f:
+        if path.endswith(".jsonl"):
+            for line in f:
+                line = line.strip()
+                if line:
+                    yield json.loads(line)
+        else:
+            for rec in json.load(f):
+                yield rec
+
 
 def _load(path: str) -> dict:
-    """Map ``name`` -> ``(ms, has_compile_split)`` for one snapshot file."""
-    with open(path) as f:
-        records = json.load(f)
-    return {r["name"]: (float(r["ms"]), "compile_ms" in r)
-            for r in records if "name" in r}
+    """Map ``name`` -> ``(ms, has_compile_split, peak_bytes_or_None,
+    experiment_label_or_None)`` for one record file."""
+    out = {}
+    for r in _rows(path):
+        if "name" not in r or "ms" not in r:
+            continue
+        peak = r.get("peak_hbm_bytes")
+        out[r["name"]] = (float(r["ms"]), "compile_ms" in r,
+                          None if peak is None else int(peak),
+                          r.get("experiment"))
+    return out
+
+
+def _merge_best(paths) -> dict:
+    """Best baseline per row name across ``paths``.
+
+    For time, a compile-split baseline always beats a pre-split one (its
+    ``ms`` is actually comparable); within the same era the fastest wins.
+    For memory, the smallest recorded watermark wins independently."""
+    best: dict = {}
+    for path in paths:
+        for name, (ms, split, peak, exp) in _load(path).items():
+            if name not in best:
+                best[name] = (ms, split, peak, exp)
+                continue
+            b_ms, b_split, b_peak, b_exp = best[name]
+            if (split, -ms) > (b_split, -b_ms):
+                b_ms, b_split = ms, split
+            if peak is not None and (b_peak is None or peak < b_peak):
+                b_peak = peak
+            best[name] = (b_ms, b_split, b_peak, b_exp or exp)
+    return best
 
 
 def check(fresh: dict, previous: dict) -> tuple:
-    """Compare ``fresh`` vs ``previous`` (name -> (best ms, split flag)).
+    """Compare ``fresh`` vs ``previous`` (name -> (ms, split, peak, exp)).
 
     Returns ``(failures, notices)``: failures are ``(name, message)`` pairs
-    for regressed rows *and* baseline rows missing from the fresh snapshot;
-    notices are rows skipped because their baseline predates the
-    compile/steady-state split."""
+    for time- or memory-regressed rows *and* baseline rows missing from the
+    fresh records; notices are rows skipped because their baseline predates
+    the compile/steady-state split.  Coverage is scoped by experiment
+    label: a baseline row from an experiment the fresh run did not execute
+    at all (e.g. a full-size sweep in the trajectory store vs a smoke run)
+    is out of scope, not a dropped benchmark; unlabelled legacy baselines
+    stay fully in scope."""
     failures = []
     notices = []
-    for name, (ms, _) in sorted(fresh.items()):
+    for name, (ms, _, peak, _exp) in sorted(fresh.items()):
         if name not in previous:
             continue  # new row: informational only
-        base, base_split = previous[name]
+        base, base_split, base_peak, _bexp = previous[name]
         if not base_split:
             notices.append(
                 (name,
                  f"baseline {base:.1f} ms has no compile_ms field "
                  "(compile-dominated measurement) — skipped, not compared"))
-            continue
-        if ms <= MIN_MS and base <= MIN_MS:
-            continue  # sub-millisecond rows: ratio is timer noise
-        if ms > RATIO * max(base, MIN_MS):
+        elif ms <= MIN_MS and base <= MIN_MS:
+            pass  # sub-millisecond rows: ratio is timer noise
+        elif ms > RATIO * max(base, MIN_MS):
             failures.append(
                 (name,
                  f"{ms:.1f} ms vs previous best {base:.1f} ms "
                  f"(> {RATIO:.0f}x)"))
+        if peak is not None and base_peak is not None:
+            if not (peak <= MIN_BYTES and base_peak <= MIN_BYTES) and \
+                    peak > MEM_RATIO * max(base_peak, MIN_BYTES):
+                failures.append(
+                    (name,
+                     f"peak_hbm_bytes {peak} vs previous best {base_peak} "
+                     f"(> {MEM_RATIO:.0f}x) — device-memory watermark grew"))
+    fresh_labels = {exp for (_, _, _, exp) in fresh.values()
+                    if exp is not None}
     for name in sorted(set(previous) - set(fresh)):
+        exp = previous[name][3]
+        if exp is not None and exp not in fresh_labels:
+            continue  # whole experiment out of scope for this run
         failures.append(
             (name,
-             f"baseline row missing from fresh snapshot (previous best "
+             f"baseline row missing from fresh records (previous best "
              f"{previous[name][0]:.1f} ms) — benchmark dropped or renamed "
              "without updating the trajectory"))
     return failures, notices
 
 
+def _default_baselines(fresh_path: str, root: str = None) -> list:
+    """Auto-discovered baselines: the trajectory store when present, else
+    the latest committed ``BENCH_<n>.json`` snapshot (numeric ``<n>``,
+    so ``BENCH_10`` beats ``BENCH_2``).  ``root`` defaults to the repo
+    root (this script's grandparent directory)."""
+    if root is None:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    traj = os.path.join(root, "bench", "trajectory.jsonl")
+    if os.path.exists(traj):
+        return [traj]
+    snaps = []
+    for path in glob.glob(os.path.join(root, "BENCH_*.json")):
+        m = re.match(r"BENCH_(\d+)\.json$", os.path.basename(path))
+        if m and os.path.abspath(path) != os.path.abspath(fresh_path):
+            snaps.append((int(m.group(1)), path))
+    return [max(snaps)[1]] if snaps else []
+
+
 def main(argv) -> int:
     """Compare ``argv[0]`` against the best of ``argv[1:]`` per row."""
     if not argv:
-        print("usage: check_bench_regression.py FRESH.json [PREV.json ...]",
+        print("usage: check_bench_regression.py FRESH.json [BASELINE ...]",
               file=sys.stderr)
         return 2
     fresh_path, prev_paths = argv[0], argv[1:]
@@ -94,18 +188,13 @@ def main(argv) -> int:
     # `git ls-files`, and the snapshot itself is committed) — drop it
     prev_paths = [p for p in prev_paths if p != fresh_path]
     if not prev_paths:
-        print(f"{fresh_path}: no previous BENCH_*.json to diff against — "
-              "trajectory starts here")
+        prev_paths = _default_baselines(fresh_path)
+    if not prev_paths:
+        print(f"{fresh_path}: no trajectory store or BENCH_*.json to diff "
+              "against — trajectory starts here")
         return 0
     fresh = _load(fresh_path)
-    best: dict = {}
-    for path in prev_paths:
-        for name, (ms, split) in _load(path).items():
-            # a compile-split baseline always beats a pre-split one (its ms
-            # is actually comparable); within the same era, best wins
-            if (name not in best or (split, -ms) > (best[name][1],
-                                                    -best[name][0])):
-                best[name] = (ms, split)
+    best = _merge_best(prev_paths)
     failures, notices = check(fresh, best)
     for name, msg in notices:
         print(f"note: {fresh_path}: {name}: {msg}")
@@ -116,9 +205,11 @@ def main(argv) -> int:
         print(f"note: {len(new)} new row(s): {', '.join(new)}")
     if not failures:
         shared = len(set(fresh) & set(best))
-        print(f"{fresh_path}: no gross perf regression "
+        print(f"{fresh_path}: no gross perf/memory regression vs "
+              f"{', '.join(os.path.basename(p) for p in prev_paths)} "
               f"({shared} shared row(s), {len(notices)} skipped pre-split "
-              f"baseline(s), threshold {RATIO:.0f}x)")
+              f"baseline(s), thresholds {RATIO:.0f}x time / "
+              f"{MEM_RATIO:.0f}x memory)")
     return 1 if failures else 0
 
 

@@ -15,7 +15,12 @@ containment to re-derive) and checks the observability contract of
 * the Contigs stage nests the chain-stage phase spans (cut → doubling →
   sort under ``phase="chain_stage"``);
 * every ``kind="kernel"`` span sits under a ``kind="op"`` span (kernel
-  launches are reached through the dispatch layer, never free-floating).
+  launches are reached through the dispatch layer, never free-floating);
+* every stage root span carries memory attribution — the
+  ``peak_hbm_bytes`` / ``hbm_bytes_in_use`` / ``hbm_source`` attrs the
+  tracer's per-span watermark (``repro.obs.memory``) attaches, so the
+  exported trace answers "which stage holds the high-water mark", not
+  just "which stage is slow".
 
 Exits 1 with a per-check message when the structure is violated.  Run from
 the repo root::
@@ -78,6 +83,18 @@ def check(tree) -> list:
         for ph in ("chain_stage", "cut", "doubling", "sort"):
             if ph not in phases:
                 failures.append(f"Contigs stage missing phase={ph!r} span")
+
+    for root in tree:
+        if root["name"] not in STAGES:
+            continue
+        attrs = root["attrs"]
+        missing_mem = [k for k in ("peak_hbm_bytes", "hbm_bytes_in_use",
+                                   "hbm_source") if k not in attrs]
+        if missing_mem:
+            failures.append(
+                f"stage span {root['name']!r} lacks memory attribution "
+                f"attr(s) {', '.join(missing_mem)} — the tracer watermark "
+                "did not run for this span")
 
     for root in tree:
         for node, _ in _walk(root):

@@ -33,7 +33,8 @@ REPO = Path(__file__).resolve().parent.parent
 # — and the smoke-artifact checker scripts; PR 6 adds the ring-SUMMA module
 # and the fused SpGEMM kernel family; PR 7 adds the observability layer —
 # its span/metrics/export surfaces are the contract docs/observability.md
-# documents — plus the trace checker and the shared benchmark timer)
+# documents — plus the trace checker and the shared benchmark timer; PR 8
+# adds the HBM watermark module, the experiment engine and its CLI)
 DEFAULT_TARGETS = [
     "src/repro/core/components.py",
     "src/repro/core/components_dist.py",
@@ -51,7 +52,10 @@ DEFAULT_TARGETS = [
     "src/repro/obs/metrics.py",
     "src/repro/obs/schema.py",
     "src/repro/obs/export.py",
+    "src/repro/obs/memory.py",
+    "src/repro/obs/experiments.py",
     "benchmarks/_timing.py",
+    "benchmarks/engine.py",
     "scripts/check_smoke_comm.py",
     "scripts/check_bench_regression.py",
     "scripts/check_trace.py",

@@ -35,7 +35,7 @@ from ..core.transitive_reduction import (
     transitive_reduction,
     transitive_reduction_fused,
 )
-from ..obs import Metrics, Tracer, span, tracing
+from ..obs import Metrics, Tracer, span, tracing, watermark
 from . import alignment as al
 from .consensus import polish_contig_set
 from .contig_gen import generate_contigs
@@ -126,11 +126,25 @@ def _tic(timings, key):
 
 
 def assemble(codes, lengths, cfg: PipelineConfig = PipelineConfig()) -> AssemblyResult:
-    tracer = Tracer(annotate=True) if cfg.trace else None
-    if tracer is None:
-        return _assemble(codes, lengths, cfg, tracer=None)
-    with tracing(tracer):
-        return _assemble(codes, lengths, cfg, tracer=tracer)
+    # the whole run executes under a device-memory watermark (obs/memory.py)
+    # so every AssemblyResult.stats carries the peak_hbm_bytes family —
+    # HBM capacity is the genome-size ceiling, and the watermark is what the
+    # bench trajectory and the regression gate track
+    with watermark() as wm:
+        tracer = Tracer(annotate=True) if cfg.trace else None
+        if tracer is None:
+            res = _assemble(codes, lengths, cfg, tracer=None)
+        else:
+            with tracing(tracer):
+                res = _assemble(codes, lengths, cfg, tracer=tracer)
+    from ..obs import validated
+
+    res.stats.update(validated({
+        "peak_hbm_bytes": wm.peak_hbm_bytes,
+        "hbm_bytes_in_use": wm.hbm_bytes_in_use,
+        "hbm_source": wm.source,
+    }, context="assemble"))
+    return res
 
 
 def _assemble(codes, lengths, cfg: PipelineConfig, *, tracer) -> AssemblyResult:

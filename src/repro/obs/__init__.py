@@ -8,11 +8,16 @@ Three pieces (docs/observability.md):
 * ``obs.schema`` / ``obs.metrics`` — the declared metric registry and the
   validating :class:`Metrics` accumulator the stats dicts emit through.
 * ``obs.export`` — Chrome trace-event / Perfetto JSON artifact writer.
+* ``obs.memory`` — device-memory (HBM) watermark sampling with a
+  live-buffer fallback; spans and benchmark records carry its columns.
+* ``obs.experiments`` — declarative experiment engine: content-addressed
+  result cache + append-only perf trajectory (``benchmarks/engine.py``).
 """
 
 from .trace import Span, Tracer, current_tracer, span, sync, tracing
 from .metrics import Metrics, MetricsError, validated
 from .export import span_tree, to_chrome_trace, write_chrome_trace
+from .memory import MemorySample, Watermark, sample, watermark
 from . import schema
 
 __all__ = [
@@ -29,4 +34,8 @@ __all__ = [
     "span_tree",
     "to_chrome_trace",
     "write_chrome_trace",
+    "MemorySample",
+    "Watermark",
+    "sample",
+    "watermark",
 ]

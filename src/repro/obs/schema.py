@@ -65,6 +65,15 @@ _SPECS: Tuple[MetricSpec, ...] = (
     # --- pipeline-wide ---
     _c("n_reads", "reads", "input reads"),
     _l("backend", "resolved kernel backend (reference|pallas)"),
+    # --- device-memory watermark (obs/memory.py) ---
+    _c("peak_hbm_bytes", "bytes",
+       "device-memory high-water mark over the assemble window "
+       "(allocator peak_bytes_in_use, or the sampled live-buffer peak on "
+       "backends without memory_stats)"),
+    _c("hbm_bytes_in_use", "bytes",
+       "device memory in use when the assemble window closed"),
+    _l("hbm_source", "memory sampling path that produced the watermark "
+       "(device_stats|live_buffers)"),
     # --- CountKmer ---
     _c("m_reliable", "kmers", "reliable k-mers kept (paper's |M|)"),
     _c("n_unique_kmers", "kmers", "distinct k-mers seen"),

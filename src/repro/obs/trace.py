@@ -116,12 +116,17 @@ class Tracer:
 
     ``annotate=True`` additionally wraps every span in a
     ``jax.profiler.TraceAnnotation`` so an XLA profiler capture taken around
-    the same region shows the identical hierarchy."""
+    the same region shows the identical hierarchy.  ``memory=True`` (the
+    default) samples device memory (``obs.memory``) on every span boundary
+    and attaches ``peak_hbm_bytes`` / ``hbm_bytes_in_use`` /
+    ``hbm_delta_bytes`` / ``hbm_source`` to each span, so exported traces
+    carry HBM columns next to the wall-clock ones."""
 
-    def __init__(self, annotate: bool = False):
+    def __init__(self, annotate: bool = False, memory: bool = True):
         self.roots: List[Span] = []
         self._stack: List[Span] = []
         self.annotate = annotate
+        self.memory = memory
         self.epoch = time.perf_counter()
 
     def _push(self, sp: Span) -> None:
@@ -175,6 +180,7 @@ def span(name: str, **attrs: Any):
     tracer = _ACTIVE
     sp = Span(name=name, attrs=dict(attrs))
     ann = None
+    wm = None
     if tracer is not None:
         tracer._push(sp)
         if tracer.annotate:
@@ -183,12 +189,29 @@ def span(name: str, **attrs: Any):
                 ann.__enter__()
             except Exception:  # pragma: no cover - profiler unavailable
                 ann = None
+        if tracer.memory:
+            from . import memory as _memory
+
+            wm = _memory.Watermark()
+            _memory._OPEN.append(wm)
+            wm.enter = _memory.sample()
     sp.t0 = time.perf_counter()
     try:
         yield sp
     finally:
         sync(sp._out)
         sp.t1 = time.perf_counter()
+        if wm is not None:
+            from . import memory as _memory
+
+            try:
+                wm.exit = _memory.sample()
+            finally:
+                _memory._OPEN.remove(wm)
+            sp.attrs.setdefault("peak_hbm_bytes", wm.peak_hbm_bytes)
+            sp.attrs.setdefault("hbm_bytes_in_use", wm.hbm_bytes_in_use)
+            sp.attrs.setdefault("hbm_delta_bytes", wm.delta_bytes)
+            sp.attrs.setdefault("hbm_source", wm.source)
         if ann is not None:
             ann.__exit__(None, None, None)
         if tracer is not None:

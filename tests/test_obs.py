@@ -248,6 +248,86 @@ def test_untraced_assemble_has_no_tracer():
 
 
 # ---------------------------------------------------------------------------
+# HBM watermark telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_watermark_measures_allocations():
+    from repro.obs import sample, watermark
+
+    with watermark() as wm:
+        x = jnp.ones((256, 256), jnp.float32)
+        sync(x)
+        sample()
+    assert wm.source in ("device_stats", "live_buffers")
+    assert wm.peak_hbm_bytes >= 256 * 256 * 4
+    assert wm.hbm_bytes_in_use >= 0
+    del x
+
+
+def test_watermark_outer_absorbs_nested_samples():
+    """An inner window's sample points fold into every open outer window,
+    so an allocation freed before the outer exit still shows in its peak."""
+    from repro.obs import sample, watermark
+
+    with watermark() as outer:
+        with watermark() as inner:
+            x = jnp.ones((128, 128), jnp.float32)
+            sync(x)
+            sample()
+            del x
+    assert inner.peak_hbm_bytes >= 128 * 128 * 4
+    assert outer.peak_hbm_bytes >= inner.peak_hbm_bytes
+    assert outer.delta_bytes == (outer.exit.bytes_in_use
+                                 - outer.enter.bytes_in_use)
+
+
+def test_watermark_window_closes_on_error():
+    from repro.obs import memory, watermark
+
+    with pytest.raises(RuntimeError):
+        with watermark():
+            raise RuntimeError("boom")
+    assert memory._OPEN == []
+
+
+def test_span_memory_attribution():
+    """Spans under a memory-enabled tracer carry the HBM attrs the trace
+    export and check_trace.py's stage assertion consume."""
+    tr = Tracer()
+    with tracing(tr):
+        with span("Stage", kind="stage"):
+            x = jnp.ones((64, 64), jnp.float32)
+            sync(x)
+    sp = tr.roots[0]
+    for key in ("peak_hbm_bytes", "hbm_bytes_in_use", "hbm_delta_bytes",
+                "hbm_source"):
+        assert key in sp.attrs, key
+    assert sp.attrs["peak_hbm_bytes"] >= sp.attrs["hbm_delta_bytes"]
+    del x
+
+
+def test_tracer_memory_opt_out():
+    tr = Tracer(memory=False)
+    with tracing(tr):
+        with span("Stage", kind="stage"):
+            pass
+    assert "peak_hbm_bytes" not in tr.roots[0].attrs
+
+
+def test_timed_returns_compile_split_and_watermark():
+    import jax
+
+    from benchmarks._timing import timed
+
+    t = timed(jax.jit(lambda: jnp.ones((64, 64)) * 2),
+              out_of=lambda r: r, reps=2)
+    assert t.steady_us >= 0 and t.compile_us > 0
+    assert t.peak_hbm_bytes >= 64 * 64 * 4
+    assert t.hbm_source in ("device_stats", "live_buffers")
+
+
+# ---------------------------------------------------------------------------
 # export
 # ---------------------------------------------------------------------------
 
