@@ -141,7 +141,9 @@ def make_engine(smoke: bool, *, cache_dir: str = _CACHE_DIR,
     rows, so it is part of the cache key)."""
     import jax
 
-    fp = code_fingerprint(_FINGERPRINT_PATHS)
+    # paths hash relative to the repo root, so the fingerprint (and with it
+    # every experiment id and trajectory dedup key) agrees across checkouts
+    fp = code_fingerprint(_FINGERPRINT_PATHS, root=_ROOT)
     fingerprint = f"{fp}-jax{jax.__version__}-d{jax.device_count()}"
     return ExperimentEngine(
         experiments(smoke), _run_experiment,

@@ -22,6 +22,15 @@ runner noise passes and only real faults fail:
   (a leaked buffer, a densified intermediate).  Rows whose baseline
   predates memory telemetry simply skip this gate.
 
+"Best previous" means best across *every* snapshot in every baseline
+file: a ``.jsonl`` trajectory holds one row per code snapshot, and the
+per-era fold of :func:`_fold_best` applies within a file exactly as it
+does across files, so the baseline cannot ratchet to merely the most
+recent measurement.  Baseline rows stamped with the fresh run's own
+``fingerprint`` are excluded outright — the experiment engine appends
+fresh rows to the trajectory before CI reaches this gate, and a
+measurement must never serve as its own baseline.
+
 Coverage is part of the contract: a baseline row that is *missing* from
 the fresh records fails with a per-row message (a silently dropped
 benchmark must not read as "no regression").  Rows only in the fresh set
@@ -74,38 +83,62 @@ def _rows(path: str):
                 yield rec
 
 
-def _load(path: str) -> dict:
-    """Map ``name`` -> ``(ms, has_compile_split, peak_bytes_or_None,
-    experiment_label_or_None)`` for one record file."""
-    out = {}
+def _fingerprints(path: str) -> frozenset:
+    """Every non-empty ``fingerprint`` carried by the records of ``path``."""
+    return frozenset(fp for fp in (r.get("fingerprint")
+                                   for r in _rows(path)) if fp)
+
+
+def _fold_best(best: dict, name: str, ms: float, split: bool,
+               peak, exp) -> None:
+    """Fold one record into ``best`` (name -> (ms, split, peak, exp)).
+
+    For time, a compile-split record always beats a pre-split one (its
+    ``ms`` is actually comparable); within the same era the fastest wins.
+    For memory, the smallest recorded watermark wins independently."""
+    if name not in best:
+        best[name] = (ms, split, peak, exp)
+        return
+    b_ms, b_split, b_peak, b_exp = best[name]
+    if (split, -ms) > (b_split, -b_ms):
+        b_ms, b_split = ms, split
+    if peak is not None and (b_peak is None or peak < b_peak):
+        b_peak = peak
+    best[name] = (b_ms, b_split, b_peak, b_exp or exp)
+
+
+def _load(path: str, exclude_fps: frozenset = frozenset()) -> dict:
+    """Best record per ``name`` within one file: map ``name`` -> ``(ms,
+    has_compile_split, peak_bytes_or_None, experiment_label_or_None)``.
+
+    Duplicate names (a ``.jsonl`` trajectory holds one row per code
+    snapshot) fold via :func:`_fold_best`, so the result is the best
+    measurement *ever recorded* in the file, not merely its most recent
+    row, and a later pre-split row never displaces a split baseline.
+    Rows whose ``fingerprint`` is in ``exclude_fps`` are skipped — they
+    came from the same code snapshot as the fresh run (the engine appends
+    to the trajectory before the gate runs) and must not serve as their
+    own baseline."""
+    out: dict = {}
     for r in _rows(path):
         if "name" not in r or "ms" not in r:
             continue
+        if r.get("fingerprint") in exclude_fps:
+            continue
         peak = r.get("peak_hbm_bytes")
-        out[r["name"]] = (float(r["ms"]), "compile_ms" in r,
-                          None if peak is None else int(peak),
-                          r.get("experiment"))
+        _fold_best(out, r["name"], float(r["ms"]), "compile_ms" in r,
+                   None if peak is None else int(peak), r.get("experiment"))
     return out
 
 
-def _merge_best(paths) -> dict:
-    """Best baseline per row name across ``paths``.
-
-    For time, a compile-split baseline always beats a pre-split one (its
-    ``ms`` is actually comparable); within the same era the fastest wins.
-    For memory, the smallest recorded watermark wins independently."""
+def _merge_best(paths, exclude_fps: frozenset = frozenset()) -> dict:
+    """Best baseline per row name across ``paths`` (:func:`_fold_best`
+    semantics within and across files)."""
     best: dict = {}
     for path in paths:
-        for name, (ms, split, peak, exp) in _load(path).items():
-            if name not in best:
-                best[name] = (ms, split, peak, exp)
-                continue
-            b_ms, b_split, b_peak, b_exp = best[name]
-            if (split, -ms) > (b_split, -b_ms):
-                b_ms, b_split = ms, split
-            if peak is not None and (b_peak is None or peak < b_peak):
-                b_peak = peak
-            best[name] = (b_ms, b_split, b_peak, b_exp or exp)
+        for name, (ms, split, peak, exp) in _load(path,
+                                                  exclude_fps).items():
+            _fold_best(best, name, ms, split, peak, exp)
     return best
 
 
@@ -119,7 +152,9 @@ def check(fresh: dict, previous: dict) -> tuple:
     label: a baseline row from an experiment the fresh run did not execute
     at all (e.g. a full-size sweep in the trajectory store vs a smoke run)
     is out of scope, not a dropped benchmark; unlabelled legacy baselines
-    stay fully in scope."""
+    stay fully in scope, and a fresh set carrying *no* experiment labels
+    at all (legacy ``benchmarks/run.py`` output) keeps every baseline row
+    in scope — full pre-engine coverage, not a blanket skip."""
     failures = []
     notices = []
     for name, (ms, _, peak, _exp) in sorted(fresh.items()):
@@ -149,7 +184,7 @@ def check(fresh: dict, previous: dict) -> tuple:
                     if exp is not None}
     for name in sorted(set(previous) - set(fresh)):
         exp = previous[name][3]
-        if exp is not None and exp not in fresh_labels:
+        if fresh_labels and exp is not None and exp not in fresh_labels:
             continue  # whole experiment out of scope for this run
         failures.append(
             (name,
@@ -194,7 +229,11 @@ def main(argv) -> int:
               "against — trajectory starts here")
         return 0
     fresh = _load(fresh_path)
-    best = _merge_best(prev_paths)
+    # baseline rows from the fresh run's own code snapshot (the engine
+    # appends to the trajectory before CI reaches this gate) are dropped:
+    # a measurement is never its own baseline
+    fresh_fps = _fingerprints(fresh_path)
+    best = _merge_best(prev_paths, exclude_fps=fresh_fps)
     failures, notices = check(fresh, best)
     for name, msg in notices:
         print(f"note: {fresh_path}: {name}: {msg}")

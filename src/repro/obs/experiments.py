@@ -48,21 +48,33 @@ def _canonical(obj: Any) -> str:
                       default=repr)
 
 
-def code_fingerprint(paths: Iterable[str]) -> str:
+def code_fingerprint(paths: Iterable[str],
+                     root: Optional[str] = None) -> str:
     """Stable hex digest of the contents of every file under ``paths``.
 
     Directories are walked recursively (``.py`` files only, sorted), plain
     files are hashed as-is; missing paths contribute their name so a
-    deleted dependency still changes the fingerprint."""
+    deleted dependency still changes the fingerprint.  File names enter
+    the digest *relative to* ``root`` (default: the common parent of
+    ``paths``) with ``/`` separators, so two checkouts of the same tree —
+    different machines, different absolute paths — agree on the
+    fingerprint and can share ``.bench_cache/`` entries and trajectory
+    dedup keys."""
     h = hashlib.sha256()
-    for path in sorted(paths):
+    abs_paths = sorted(os.path.abspath(p) for p in paths)
+    if root is None and abs_paths:
+        root = os.path.commonpath(abs_paths)
+        if not os.path.isdir(root):
+            root = os.path.dirname(root)
+    for path in abs_paths:
         if os.path.isdir(path):
             files = sorted(glob.glob(os.path.join(path, "**", "*.py"),
                                      recursive=True))
         else:
             files = [path]
         for f in files:
-            h.update(f.encode())
+            rel = os.path.relpath(f, root) if root else f
+            h.update(rel.replace(os.sep, "/").encode())
             try:
                 with open(f, "rb") as fh:
                     h.update(fh.read())
@@ -225,6 +237,12 @@ class ExperimentEngine:
             problems = validate_records(records, exp.label)
             if problems:
                 raise ValueError("; ".join(problems))
+            # stamp provenance into the records themselves (not only the
+            # trajectory rows): the regression gate uses the fingerprint to
+            # exclude a fresh run's own rows from its baseline
+            for rec in records:
+                rec.setdefault("experiment_id", eid)
+                rec.setdefault("fingerprint", self.fingerprint)
             doc = {
                 "experiment_id": eid,
                 "spec": exp.spec(),

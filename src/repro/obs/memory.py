@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import threading
 from typing import Iterator, List, Optional
 
 import jax
@@ -123,9 +124,21 @@ class Watermark:
         return self.exit.bytes_in_use - self.enter.bytes_in_use
 
 
-#: watermark windows currently open; every sample is folded into all of them
-#: so outer windows see the sample points their nested spans take.
-_OPEN: List[Watermark] = []
+#: per-thread registry of open watermark windows: every sample folds into
+#: all of the *calling thread's* windows, so outer windows see the sample
+#: points their nested spans take while concurrent threads never fold
+#: samples into each other's accounting.
+_LOCAL = threading.local()
+
+
+def _open_watermarks() -> List[Watermark]:
+    """The calling thread's stack of currently-open watermark windows."""
+    try:
+        return _LOCAL.open
+    except AttributeError:
+        out: List[Watermark] = []
+        _LOCAL.open = out
+        return out
 
 
 def sample() -> MemorySample:
@@ -137,7 +150,7 @@ def sample() -> MemorySample:
     if s is None:
         b = _live_buffer_bytes()
         s = MemorySample(b, b, "live_buffers")
-    for w in _OPEN:
+    for w in _open_watermarks():
         w._observe(s)
     return s
 
@@ -151,7 +164,8 @@ def watermark() -> Iterator[Watermark]:
     memory-enabled tracer, nested watermarks, explicit :func:`sample`
     calls)."""
     w = Watermark()
-    _OPEN.append(w)
+    opened = _open_watermarks()
+    opened.append(w)
     try:
         w.enter = sample()
         yield w
@@ -159,4 +173,4 @@ def watermark() -> Iterator[Watermark]:
         try:
             w.exit = sample()
         finally:
-            _OPEN.remove(w)
+            opened.remove(w)

@@ -193,8 +193,17 @@ def span(name: str, **attrs: Any):
             from . import memory as _memory
 
             wm = _memory.Watermark()
-            _memory._OPEN.append(wm)
-            wm.enter = _memory.sample()
+            opened = _memory._open_watermarks()
+            opened.append(wm)
+            try:
+                wm.enter = _memory.sample()
+            except Exception:
+                # telemetry must not kill the span, and a failed enter
+                # sample must not leave the watermark registered (every
+                # later sample would fold into it forever): pop it and run
+                # the span without memory attribution
+                opened.remove(wm)
+                wm = None
     sp.t0 = time.perf_counter()
     try:
         yield sp
@@ -206,8 +215,10 @@ def span(name: str, **attrs: Any):
 
             try:
                 wm.exit = _memory.sample()
+            except Exception:
+                pass  # exit attrs degrade to the enter-side numbers
             finally:
-                _memory._OPEN.remove(wm)
+                _memory._open_watermarks().remove(wm)
             sp.attrs.setdefault("peak_hbm_bytes", wm.peak_hbm_bytes)
             sp.attrs.setdefault("hbm_bytes_in_use", wm.hbm_bytes_in_use)
             sp.attrs.setdefault("hbm_delta_bytes", wm.delta_bytes)

@@ -73,6 +73,29 @@ def test_code_fingerprint_tracks_py_edits(tmp_path):
     assert code_fingerprint([str(tmp_path)]) != fp1
 
 
+def test_code_fingerprint_checkout_location_invariant(tmp_path):
+    """Two checkouts of the same tree at different absolute paths agree on
+    the fingerprint (paths hash relative to the tree root), so cache
+    entries and trajectory dedup keys survive across machines."""
+    for co in ("checkout_a", "deeper/checkout_b"):
+        d = tmp_path / co
+        d.mkdir(parents=True)
+        (d / "a.py").write_text("x = 1\n")
+        (d / "sub").mkdir()
+        (d / "sub" / "b.py").write_text("y = 2\n")
+    fp_a = code_fingerprint([str(tmp_path / "checkout_a")])
+    fp_b = code_fingerprint([str(tmp_path / "deeper" / "checkout_b")])
+    assert fp_a == fp_b
+    # an explicit root (the engine passes the repo root) matches the
+    # default common-parent behaviour for a single-tree path list
+    assert code_fingerprint([str(tmp_path / "checkout_a")],
+                            root=str(tmp_path / "checkout_a")) == fp_a
+    # ... but file *names* still matter: renaming changes the fingerprint
+    os.rename(str(tmp_path / "checkout_a" / "a.py"),
+              str(tmp_path / "checkout_a" / "a2.py"))
+    assert code_fingerprint([str(tmp_path / "checkout_a")]) != fp_a
+
+
 def test_validate_records_reports_each_missing_field():
     rec = {"name": "r"}
     problems = validate_records([rec], "ctx")
@@ -98,6 +121,10 @@ def test_run_caches_and_todo_empties(tmp_path):
     out = eng.run()
     assert sorted(calls) == ["alpha", "beta"]
     assert len(out["records"]) == 2
+    ids = {eng.id_of(e) for e in eng.experiments}
+    for rec in out["records"]:  # provenance stamped into the records
+        assert rec["fingerprint"] == "fp0"
+        assert rec["experiment_id"] in ids
     assert out["fresh_records"] == out["records"]
     assert out["hits"] == []
     assert eng.todo() == []  # the CI cache-hit gate

@@ -288,7 +288,41 @@ def test_watermark_window_closes_on_error():
     with pytest.raises(RuntimeError):
         with watermark():
             raise RuntimeError("boom")
-    assert memory._OPEN == []
+    assert memory._open_watermarks() == []
+
+
+def test_watermark_windows_are_thread_local():
+    """A sample taken on another thread folds into that thread's windows
+    only — concurrent pipelines never pollute each other's peaks."""
+    import threading
+
+    from repro.obs import memory, watermark
+
+    with watermark() as wm:
+        before = wm.peak_hbm_bytes
+        t = threading.Thread(target=memory.sample)
+        t.start()
+        t.join()
+        assert wm.peak_hbm_bytes == before
+
+
+def test_span_survives_enter_sample_failure(monkeypatch):
+    """A failing enter sample must not leak its watermark into the open
+    registry (every later sample would fold into it forever) nor kill the
+    span: the span records without memory attribution instead."""
+    from repro.obs import memory
+
+    def boom():
+        raise RuntimeError("sampling failed")
+
+    monkeypatch.setattr(memory, "sample", boom)
+    tr = Tracer()
+    with tracing(tr):
+        with span("Stage", kind="stage") as sp:
+            pass
+    assert memory._open_watermarks() == []
+    assert tr.roots == [sp]
+    assert "peak_hbm_bytes" not in sp.attrs
 
 
 def test_span_memory_attribution():

@@ -120,6 +120,65 @@ def test_cbr_pre_split_baseline_skipped_with_notice(tmp_path, cbr, capsys):
     assert "skipped, not compared" in capsys.readouterr().out
 
 
+def test_cbr_best_within_one_file_wins(tmp_path, cbr, capsys):
+    # a .jsonl trajectory holds one row per code snapshot: the baseline is
+    # the best ever recorded, not merely the most recent row (otherwise
+    # each PR may regress 5x vs the previous PR — ratchet creep)
+    fresh = _write(tmp_path / "fresh.json", [_row("a", ms=30.0)])
+    prev = _write(tmp_path / "traj.jsonl",
+                  [_row("a", ms=2.0), _row("a", ms=29.0)])
+    assert cbr.main([fresh, prev]) == 1  # 30 > 5 x 2, not vs 29
+    assert "previous best 2.0 ms" in capsys.readouterr().out
+
+
+def test_cbr_within_file_smallest_watermark_wins(tmp_path, cbr, capsys):
+    fresh = _write(tmp_path / "fresh.json", [_row("a", peak=40 << 20)])
+    prev = _write(tmp_path / "traj.jsonl",
+                  [_row("a", peak=4 << 20), _row("a", peak=39 << 20)])
+    assert cbr.main([fresh, prev]) == 1
+    assert "watermark grew" in capsys.readouterr().out
+
+
+def test_cbr_later_pre_split_row_keeps_split_baseline(tmp_path, cbr, capsys):
+    # a pre-split row appended after a split one must not displace it
+    fresh = _write(tmp_path / "fresh.json", [_row("a", ms=100.0)])
+    prev = _write(tmp_path / "traj.jsonl",
+                  [_row("a", ms=10.0), {"name": "a", "ms": 0.5}])
+    assert cbr.main([fresh, prev]) == 1
+    assert "previous best 10.0 ms" in capsys.readouterr().out
+
+
+def test_cbr_fresh_fingerprint_rows_excluded_from_baseline(
+        tmp_path, cbr, capsys):
+    # CI: the engine appends fresh rows to the trajectory before the gate
+    # runs; rows stamped with the fresh run's fingerprint must not serve
+    # as baseline or the ratio gates compare a measurement to itself
+    fresh = _write(tmp_path / "fresh.json",
+                   [dict(_row("a", ms=100.0), fingerprint="fpNEW")])
+    prev = _write(tmp_path / "traj.jsonl",
+                  [dict(_row("a", ms=10.0), fingerprint="fpOLD"),
+                   dict(_row("a", ms=100.0), fingerprint="fpNEW")])
+    assert cbr.main([fresh, prev]) == 1
+    assert "previous best 10.0 ms" in capsys.readouterr().out
+    # a store holding only the self-snapshot means the trajectory starts
+    # here: zero shared rows, clean pass — not a silent self-comparison
+    only_self = _write(tmp_path / "self.jsonl",
+                       [dict(_row("a", ms=100.0), fingerprint="fpNEW")])
+    assert cbr.main([fresh, only_self]) == 0
+    assert "0 shared row(s)" in capsys.readouterr().out
+
+
+def test_cbr_unlabelled_fresh_keeps_full_coverage(tmp_path, cbr, capsys):
+    # legacy benchmarks/run.py output carries no experiment labels: every
+    # labelled baseline row stays in scope, so a dropped row still fails
+    # instead of being skipped as "out of scope"
+    fresh = _write(tmp_path / "fresh.json", [_row("a")])
+    prev = _write(tmp_path / "traj.jsonl",
+                  [_row("a"), _row("gone", experiment="sparsity")])
+    assert cbr.main([fresh, prev]) == 1
+    assert "missing from fresh records" in capsys.readouterr().out
+
+
 def test_cbr_best_previous_wins_across_baselines(tmp_path, cbr):
     fresh = _write(tmp_path / "fresh.json", [_row("a", ms=30.0)])
     slow = _write(tmp_path / "p1.json", [_row("a", ms=29.0)])
