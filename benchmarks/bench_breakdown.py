@@ -9,7 +9,9 @@ path (DESIGN.md §2.7).
 With ``--distribution shard_map`` (or ``both``) an extra pipeline run uses
 the explicit-exchange contig doubling (§2.9) and emits a ``contig_comm``
 row: measured per-device/per-round exchange volume next to the analytic
-model from ``bench_comm_model.words_contig_doubling``.
+model from ``bench_comm_model.words_contig_doubling`` — plus an
+``align_comm`` row for the distributed x-drop extension (§2.12): measured
+``exchange_words_align`` next to ``bench_comm_model.words_align``.
 
 Standalone: ``python -m benchmarks.bench_breakdown --backend pallas
 --distribution both``.
@@ -103,7 +105,8 @@ def run(backends=("reference", "pallas"), distributions=("gspmd",)):
         import jax
 
         from .bench_comm_model import (
-            words_chain_sort, words_contig_doubling, words_graph_cut,
+            words_align, words_chain_sort, words_contig_doubling,
+            words_graph_cut,
         )
 
         cfg = PipelineConfig(m_capacity=1 << 16, upper=48, read_capacity=128,
@@ -128,6 +131,24 @@ def run(backends=("reference", "pallas"), distributions=("gspmd",)):
              f"model_words_cut={words_graph_cut(n_states, p)};"
              f"exchange_words_sort={res.stats['exchange_words_sort']};"
              f"model_words_sort={words_chain_sort(n_states, p)}")
+        )
+        # §2.12 communication check: distributed x-drop extension, measured
+        # per-device gather/scatter volume vs the analytic model (the
+        # pipeline ran it on the default 1D row mesh over all devices)
+        n_reads = res.stats["n_reads"]
+        bucket = res.stats["align_bucket"]
+        n_pad = -(-n_reads // p) * p
+        bucket_pad = -(-bucket // p) * p
+        wm_align = words_align(n_pad=n_pad, row_width=rs.codes.shape[1],
+                               bucket_pad=bucket_pad, p=p)
+        rows.append(
+            (f"breakdown[pallas/shard_map]/align_comm",
+             res.timings["Alignment"] * 1e6,
+             f"P={p};bucket={bucket};"
+             f"exchange_words_align={res.stats['exchange_words_align']};"
+             f"model_words_align={wm_align};"
+             f"exchange_rounds_align={res.stats['exchange_rounds_align']};"
+             f"n_passed={res.stats['n_passed']}")
         )
     return rows
 

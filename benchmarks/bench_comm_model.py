@@ -122,6 +122,22 @@ def words_summa(*, n_rows, a_block_slots, a_words_per_slot,
     return (pc - 1) * (wa + wb)
 
 
+def words_align(*, n_pad, row_width, bucket_pad, p):
+    """Per-device words of the distributed x-drop extension
+    (``core.align_dist.align_bucket_shard_map``): one ring all-gather of the
+    padded read-code matrix (``(n/P)·(P−1)`` rows of ``row_width`` words —
+    nested row axes telescope to the same total) plus one allreduce of the
+    five stacked int32 ``PairAlignment`` outputs over the padded bucket
+    (reduce-scatter + all-gather = ``2·(5·bucket/P)·(P−1)`` words).
+    Data-independent — fixed by (n, L, bucket, P) alone — so the measured
+    ``exchange_words_align`` stat must equal this exactly
+    (``scripts/check_smoke_comm.py`` asserts it)."""
+    if p <= 1:
+        return 0
+    return (row_width * (n_pad // p) * (p - 1)
+            + 2 * 5 * (bucket_pad // p) * (p - 1))
+
+
 def run():
     rows = []
     for name, ds in DATASETS.items():

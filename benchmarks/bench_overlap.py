@@ -11,7 +11,10 @@ counts (a²m/P vs am/√P, paper §V-B).
 SUMMA rows (DESIGN.md §2.11): ``overlap[shard_map]/ring_<pr>x<pc>`` with the
 measured per-``ppermute`` ``exchange_words_summa`` next to the analytic
 ``model_words_summa`` (``bench_comm_model.words_summa``) in the derived
-field — ``scripts/check_smoke_comm.py`` asserts they match exactly."""
+field, plus the distributed x-drop row (§2.12):
+``align[shard_map]/bucket<b>_P<p>`` with ``exchange_words_align`` vs
+``model_words_align`` — ``scripts/check_smoke_comm.py`` asserts both pairs
+match exactly."""
 
 from __future__ import annotations
 
@@ -106,6 +109,77 @@ def _ring_rows(a, at, n_reads, cap):
              t.compile_us, t.peak_hbm_bytes, t.hbm_source)]
 
 
+def _align_rows(a, at, rs, cap, k=15):
+    """Time the distributed x-drop extension and cross-check words.
+
+    Rebuilds the pipeline's pv-valid candidate compaction from the local
+    SpGEMM product, then routes the bucket through
+    ``core.align_dist.align_bucket_shard_map`` on the default row mesh.
+    Emits one ``align[shard_map]/bucket<b>_P<p>`` row whose derived field
+    carries the measured ``exchange_words_align`` next to the analytic
+    ``model_words_align`` (``bench_comm_model.words_align``) —
+    ``scripts/check_smoke_comm.py`` requires the two to agree exactly."""
+    from repro.core.align_dist import align_bucket_shard_map
+    from repro.core.components_dist import default_row_mesh, infer_row_axes
+    from repro.core.semiring import overlap_semiring as OV
+    from repro.core.spgemm import spgemm
+    from repro.core.spmat import next_pow2
+
+    from .bench_comm_model import words_align
+
+    n = rs.n_reads
+    codes = jnp.asarray(rs.codes, jnp.uint8)
+    lengths = jnp.asarray(rs.lengths, jnp.int32)
+    c, _ = spgemm(a, at, semiring=OV, capacity=cap)
+
+    # the pipeline's candidate compaction (assembly/pipeline.py Alignment)
+    pair_i = jnp.broadcast_to(jnp.arange(n)[:, None], (n, cap)).reshape(-1)
+    pair_j = c.cols.reshape(-1)
+    cnt = c.vals["cnt"].reshape(-1)
+    apos = c.vals["apos"][..., 0].reshape(-1)
+    bpos = c.vals["bpos"][..., 0].reshape(-1)
+    pv = (pair_j > pair_i) & (cnt >= 2)
+    pa, ca = apos // 2, apos % 2
+    pb, cb = bpos // 2, bpos % 2
+    strand = jnp.where(pv, ca ^ cb, 0)
+    li = lengths[jnp.where(pv, pair_i, 0)]
+    lj = lengths[jnp.where(pv, pair_j, 0)]
+    pb_or = jnp.where(strand == 1, lj - k - pb, pb)
+    bucket = next_pow2(int(jnp.sum(pv)))
+    idx = jnp.nonzero(pv, size=bucket, fill_value=0)[0]
+    cand = {
+        "i": pair_i[idx], "j": pair_j[idx], "li": li[idx], "lj": lj[idx],
+        "pa": jnp.maximum(pa[idx], 0), "pb": jnp.maximum(pb_or[idx], 0),
+        "strand": strand[idx],
+    }
+
+    mesh = default_row_mesh()
+    p = 1
+    for ax in infer_row_axes(mesh):
+        p *= mesh.shape[ax]
+
+    def call():
+        return align_bucket_shard_map(
+            codes, cand, k=k, mesh=mesh, backend="reference",
+            band=33, max_steps=1024,
+        )
+
+    t = timed(call, out_of=lambda r: r[0].score)
+    (res, st), t_align = t.result, t.steady_us
+
+    n_pad = -(-n // p) * p
+    bucket_pad = -(-bucket // p) * p
+    wm = words_align(n_pad=n_pad, row_width=int(codes.shape[1]),
+                     bucket_pad=bucket_pad, p=p)
+    derived = (f"exchange_words_align={st['exchange_words_align']}"
+               f";model_words_align={wm}"
+               f";exchange_rounds_align={st['exchange_rounds_align']}"
+               f";bucket={bucket}"
+               f";n_scored={int(jnp.sum(res.score > 0))}")
+    return [(f"align[shard_map]/bucket{bucket_pad}_P{p}", t_align, derived,
+             t.compile_us, t.peak_hbm_bytes, t.hbm_source)]
+
+
 def run(distributions=("local",), genome=10_000):
     from repro.core.semiring import overlap_semiring as OV
     from repro.core.spgemm import spgemm
@@ -116,6 +190,7 @@ def run(distributions=("local",), genome=10_000):
     rows = []
     if "shard_map" in distributions:
         rows += _ring_rows(a, at, n, 64)
+        rows += _align_rows(a, at, rs, 64)
     if "local" not in distributions:
         return rows
 

@@ -16,8 +16,14 @@ measured ring-SUMMA exchange volume (``exchange_words_summa``, accounted per
 W = am/√P).  The ring schedule moves whole ELL panels regardless of data, so
 these too are exactly equal in practice.
 
-Exits 1 when a row disagrees or when no shard_map contig row or shard_map
-overlap row is present at all (a silently dropped distribution axis must
+And every ``align[shard_map]`` row: the measured distributed x-drop
+exchange volume (``exchange_words_align``, accounted per ``ppermute`` /
+allreduce issued by ``core/align_dist.align_bucket_shard_map``) against the
+analytic ``model_words_align`` (= ``bench_comm_model.words_align``) — the
+gather/scatter schedule is fixed by (n, L, bucket, P), so exact again.
+
+Exits 1 when a row disagrees or when no shard_map contig, overlap or align
+row is present at all (a silently dropped distribution axis must
 fail CI, not pass it).  Run from the repo root::
 
     python scripts/check_smoke_comm.py BENCH_smoke.json
@@ -41,6 +47,7 @@ def _field(derived: str, key: str) -> int | None:
 _CONTRACTS = (
     ("contigs", "exchange_words_sort", "model_words_sort"),
     ("overlap", "exchange_words_summa", "model_words_summa"),
+    ("align", "exchange_words_align", "model_words_align"),
 )
 
 

@@ -14,6 +14,9 @@ containment to re-derive) and checks the observability contract of
   traced) and the skew/ring/collect phases around it;
 * the Contigs stage nests the chain-stage phase spans (cut → doubling →
   sort under ``phase="chain_stage"``);
+* the Alignment stage nests the distributed x-drop phase spans
+  (``pair_exchange`` around the shard_map call; ``gather_reads`` →
+  ``extend`` → ``scatter_scores`` inside it, DESIGN.md §2.12);
 * every ``kind="kernel"`` span sits under a ``kind="op"`` span (kernel
   launches are reached through the dispatch layer, never free-floating);
 * every stage root span carries memory attribution — the
@@ -83,6 +86,13 @@ def check(tree) -> list:
         for ph in ("chain_stage", "cut", "doubling", "sort"):
             if ph not in phases:
                 failures.append(f"Contigs stage missing phase={ph!r} span")
+    align = by_name.get("Alignment")
+    if align is not None:
+        phases = _phases(align)
+        for ph in ("pair_exchange", "gather_reads", "extend",
+                   "scatter_scores"):
+            if ph not in phases:
+                failures.append(f"Alignment stage missing phase={ph!r} span")
 
     for root in tree:
         if root["name"] not in STAGES:

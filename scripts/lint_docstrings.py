@@ -36,6 +36,7 @@ REPO = Path(__file__).resolve().parent.parent
 # documents — plus the trace checker and the shared benchmark timer; PR 8
 # adds the HBM watermark module, the experiment engine and its CLI)
 DEFAULT_TARGETS = [
+    "src/repro/core/align_dist.py",
     "src/repro/core/components.py",
     "src/repro/core/components_dist.py",
     "src/repro/core/backend.py",

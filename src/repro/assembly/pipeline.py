@@ -80,7 +80,9 @@ class PipelineConfig:
     # distribution of the explicitly-exchanged stages (DESIGN.md §2.9-§2.11):
     # "gspmd" = auto-sharded, "shard_map" = (a) the overlap SpGEMM on the
     # explicit-exchange ring SUMMA (core/summa.py, 2D ("data", "model") mesh
-    # built when `mesh` lacks a "model" axis) and (b) the contig chain stage's
+    # built when `mesh` lacks a "model" axis), (b) the x-drop extension
+    # block-split along the candidate-pair axis over the mesh's grid-row
+    # axes (core/align_dist.py, §2.12) and (c) the contig chain stage's
     # branch cut + doubling + ring-bitonic ordering under one ppermute/psum
     # exchange region over `mesh` (a 1D device mesh is built when None)
     distribution: str = "gspmd"
@@ -263,24 +265,43 @@ def _assemble(codes, lengths, cfg: PipelineConfig, *, tracer) -> AssemblyResult:
             "strand": strand[idx],
         }
 
-        def _align_block(blk):
-            ai = codes[blk["i"]]
-            bj = codes[blk["j"]]
-            bj = jnp.where(
-                (blk["strand"] == 1)[:, None], revcomp(bj, blk["lj"]), bj
-            )
-            out = al.batch_extend(
-                ai, blk["li"], bj, blk["lj"], blk["pa"], blk["pb"],
-                k=cfg.k, backend=backend, xdrop=cfg.xdrop, match=cfg.match,
-                mismatch=cfg.mismatch, gap=cfg.gap, band=cfg.band,
-                max_steps=cfg.max_steps,
-            )
-            return tuple(out), None
+        # distribution="shard_map" redistributes the bucket over the mesh's
+        # grid-row axes inside one explicit-exchange shard_map region
+        # (core/align_dist.py, DESIGN.md §2.12) — bit-identical per-pair
+        # results, with the gather/scatter words surfaced in stats.  The
+        # align exchange stats are present-and-zero on the gspmd path
+        # (seeded from obs.schema's "align_exchange" group after the
+        # branch), same contract as the summa keys above.
+        if resolve_distribution(cfg.distribution) == "shard_map":
+            from ..core.align_dist import align_bucket_shard_map
 
-        res_b, _ = map_row_blocks(
-            _align_block, cand, n_rows=bucket,
-            row_chunk=min(cfg.align_chunk, bucket),
-        )
+            res_b, align_stats = align_bucket_shard_map(
+                codes, cand, k=cfg.k, mesh=cfg.mesh, backend=backend,
+                xdrop=cfg.xdrop, match=cfg.match, mismatch=cfg.mismatch,
+                gap=cfg.gap, band=cfg.band, max_steps=cfg.max_steps,
+            )
+            metrics.emit("align_distribution", "shard_map")
+            metrics.emit_many(align_stats)
+        else:
+            def _align_block(blk):
+                ai = codes[blk["i"]]
+                bj = codes[blk["j"]]
+                bj = jnp.where(
+                    (blk["strand"] == 1)[:, None], revcomp(bj, blk["lj"]), bj
+                )
+                out = al.batch_extend(
+                    ai, blk["li"], bj, blk["lj"], blk["pa"], blk["pb"],
+                    k=cfg.k, backend=backend, xdrop=cfg.xdrop,
+                    match=cfg.match, mismatch=cfg.mismatch, gap=cfg.gap,
+                    band=cfg.band, max_steps=cfg.max_steps,
+                )
+                return tuple(out), None
+
+            res_b, _ = map_row_blocks(
+                _align_block, cand, n_rows=bucket,
+                row_chunk=min(cfg.align_chunk, bucket),
+            )
+            metrics.emit("align_distribution", "gspmd")
 
         # Scatter bucket results back to the (n · K_C,) slot layout; dead
         # slots (pv False) keep zeros and are masked out of ``passed`` below.
@@ -299,6 +320,7 @@ def _assemble(codes, lengths, cfg: PipelineConfig, *, tracer) -> AssemblyResult:
         & (res.score >= cfg.score_frac * ospan)
         & (ospan >= cfg.min_overlap)
     )
+    metrics.seed_zero("align_exchange")
     metrics.emit_many({
         "n_aligned": n_live,
         "align_candidates": e_total,

@@ -34,7 +34,8 @@ class MetricSpec:
     """One registered metric: its kind, unit and contract.
 
     ``zero_group`` names the present-and-zero contract the key belongs to
-    (``"contig_exchange"``, ``"summa_exchange"``) — every key of a group is
+    (``"contig_exchange"``, ``"summa_exchange"``, ``"align_exchange"``) —
+    every key of a group is
     emitted on every path, zero where the phase did not run — or ``None``
     for keys without a presence guarantee."""
 
@@ -100,11 +101,20 @@ _SPECS: Tuple[MetricSpec, ...] = (
     _c("overflow_C", "entries", "candidate entries dropped by K_C capacity"),
     _c("nnz_C", "entries", "nonzeros of the candidate matrix C = A*At"),
     _g("c_density", "entries/read", "nnz_C per read"),
-    # --- Alignment ---
+    # --- Alignment (core/align_dist.py distributed x-drop) ---
     _c("n_aligned", "pairs", "live candidate pairs aligned"),
     _c("align_candidates", "slots", "candidate slots (n * K_C)"),
     _c("align_bucket", "slots", "pow-2 compacted alignment bucket size"),
     _c("n_passed", "pairs", "pairs passing the score/length gates"),
+    _l("align_distribution",
+       "alignment-stage distribution (gspmd|shard_map)"),
+    _c("exchange_words_align", "words",
+       "per-device words of the alignment stage's explicit exchanges "
+       "(read-row ring gather + score-scatter allreduce, "
+       "bench_comm_model.words_align)", "align_exchange"),
+    _c("exchange_rounds_align", "rounds",
+       "explicit exchange rounds of the alignment stage (ring hops + the "
+       "scatter allreduce)", "align_exchange"),
     # --- BuildR ---
     _c("overflow_R", "entries", "overlap entries dropped by K_R capacity"),
     _c("nnz_R", "entries", "nonzeros of the overlap graph R"),

@@ -11,8 +11,21 @@ import pytest
 # burning more than this is a regression we want CI to *fail on*, not absorb
 # (pytest-timeout is not in the baked image, so the assert lives here).
 # `slow`/`dist`-marked tests are exempt; REPRO_TEST_BUDGET_S overrides, 0
-# disables.
-TEST_BUDGET_S = float(os.environ.get("REPRO_TEST_BUDGET_S", "60"))
+# (or any value ≤ 0) disables; an unparseable value falls back to the
+# default instead of erroring the whole collection.
+
+
+def _budget_from_env(default: float = 60.0) -> float:
+    raw = os.environ.get("REPRO_TEST_BUDGET_S")
+    if raw is None or not raw.strip():
+        return default
+    try:
+        return float(raw)
+    except ValueError:
+        return default
+
+
+TEST_BUDGET_S = _budget_from_env()
 
 
 @pytest.hookimpl(hookwrapper=True)

@@ -1,8 +1,10 @@
-"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)
+plus a property-based x-drop parity layer (``_hypothesis_compat``)."""
 
 import numpy as np
 import jax.numpy as jnp
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.minplus import minplus_matmul, minplus_matmul_ref
 from repro.kernels.xdrop import xdrop_extend_batch, xdrop_extend_batch_ref
@@ -56,6 +58,48 @@ def test_xdrop_kernel_sweep(e, la, lb, band, pairs_per_block, direction):
     np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
     np.testing.assert_array_equal(np.asarray(j1), np.asarray(j2))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(0, 2**31 - 1),
+    st.floats(0.0, 0.3),
+    st.sampled_from([5, 15, 40]),
+    st.sampled_from([(1, -1, -1), (2, -3, -2)]),
+    st.sampled_from([9, 33]),
+    st.sampled_from([1, -1]),
+)
+def test_xdrop_kernel_property_parity(seed, err, xd, scoring, band, direction):
+    """Kernel-level property: for random sequences, error rates, x-drop
+    thresholds, scoring triples, bands and walk directions the Pallas kernel
+    is bit-identical to the reference wavefront on all three outputs.
+    Shapes are fixed so the jit/interpret caches persist across examples."""
+    e, la, lb = 4, 72, 72
+    match, mismatch, gap = scoring
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 4, (e, la)).astype(np.uint8)
+    b = a.copy()
+    noise = rng.random((e, lb)) < err
+    b = np.where(noise, (b + rng.integers(1, 4, (e, lb))) % 4, b)
+    b = b.astype(np.uint8)
+    len_a = rng.integers(1, la + 1, e).astype(np.int32)
+    len_b = rng.integers(1, lb + 1, e).astype(np.int32)
+    if direction == 1:
+        base_a = np.zeros(e, np.int32)
+        base_b = np.zeros(e, np.int32)
+    else:
+        base_a = (len_a - 1).astype(np.int32)
+        base_b = (len_b - 1).astype(np.int32)
+    step = np.full(e, direction, np.int32)
+    args = [jnp.asarray(x) for x in
+            (a, base_a, step, len_a, b, base_b, step, len_b)]
+    kw = dict(xdrop=xd, match=match, mismatch=mismatch, gap=gap, band=band,
+              max_steps=la + lb)
+    pal = xdrop_extend_batch(*args, pairs_per_block=2, **kw)
+    ref = xdrop_extend_batch_ref(*args, **kw)
+    for name, x, y in zip(("score", "ai", "bj"), pal, ref):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=name)
 
 
 def _tree_equal(x, y):

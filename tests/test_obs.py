@@ -120,9 +120,12 @@ def test_validated_reports_missing_group_keys():
 
 
 def test_zero_groups_declared():
-    assert set(schema.ZERO_GROUPS) == {"contig_exchange", "summa_exchange"}
+    assert set(schema.ZERO_GROUPS) == {
+        "contig_exchange", "summa_exchange", "align_exchange",
+    }
     assert len(schema.group_keys("contig_exchange")) == 7
     assert len(schema.group_keys("summa_exchange")) == 2
+    assert len(schema.group_keys("align_exchange")) == 2
 
 
 # ---------------------------------------------------------------------------

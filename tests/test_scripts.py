@@ -1,5 +1,6 @@
-"""CI gate scripts (``scripts/check_bench_regression.py`` and
-``scripts/check_trace.py``) against pass/fail fixtures.
+"""CI gate scripts (``scripts/check_bench_regression.py``,
+``scripts/check_trace.py`` and ``scripts/check_smoke_comm.py``) against
+pass/fail fixtures.
 
 The scripts are stdlib-only and loaded by file path (``scripts/`` is not a
 package); the fixtures pin both directions of each gate — a clean run
@@ -244,10 +245,18 @@ def _valid_tree(ctr):
     contig_children = [phase("chain_stage",
                              [phase("cut"), phase("doubling"),
                               phase("sort")])]
+    align_children = [phase("pair_exchange",
+                            [phase("gather_reads"),
+                             phase("extend",
+                                   [_node("op", "op",
+                                          [_node("k", "kernel",
+                                                 kernel="xdrop")])]),
+                             phase("scatter_scores")])]
     tree = []
     for name in ctr.STAGES:
         kids = ({"SpGEMM": spgemm_children,
-                 "Contigs": contig_children}.get(name, ()))
+                 "Contigs": contig_children,
+                 "Alignment": align_children}.get(name, ()))
         tree.append(stage(name, kids))
     return tree
 
@@ -283,6 +292,15 @@ def test_ctr_missing_ring_or_chain_phase_fails(ctr):
     assert any("chain_stage" in m for m in ctr.check(tree2))
 
 
+def test_ctr_missing_align_phase_fails(ctr):
+    tree = _valid_tree(ctr)
+    align = next(n for n in tree if n["name"] == "Alignment")
+    align["children"] = []
+    msgs = ctr.check(tree)
+    for ph in ("pair_exchange", "gather_reads", "extend", "scatter_scores"):
+        assert any(f"phase={ph!r}" in m and "Alignment" in m for m in msgs)
+
+
 def test_ctr_kernel_outside_op_fails(ctr):
     tree = _valid_tree(ctr)
     tree[0]["children"] = [_node("stray", "kernel", kernel="x")]
@@ -300,3 +318,78 @@ def test_ctr_main_exit_codes(tmp_path, ctr, capsys):
     bad.write_text(json.dumps({"traceEvents": []}))
     assert ctr.main([str(bad)]) == 1
     assert ctr.main([]) == 2
+
+
+# ---------------------------------------------------------------------------
+# check_smoke_comm
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def csc():
+    return _load_script("check_smoke_comm")
+
+
+def _comm_row(op, shape, derived):
+    return {"name": f"{op}[shard_map]/{shape}", "op": op,
+            "backend": "shard_map", "shape": shape, "ms": 1.0,
+            "derived": derived}
+
+
+def _valid_artifact():
+    return [
+        _comm_row("contigs", "n256",
+                  "exchange_words_sort=100;model_words_sort=100"),
+        _comm_row("overlap", "ring_2x2",
+                  "exchange_words_summa=200;model_words_summa=200"),
+        _comm_row("align", "bucket512_P4",
+                  "exchange_words_align=300;model_words_align=300"),
+    ]
+
+
+def test_csc_valid_artifact_passes(tmp_path, csc, capsys):
+    path = _write(tmp_path / "bench.json", _valid_artifact())
+    assert csc.main([path]) == 0
+    out = capsys.readouterr().out
+    assert "comm-model cross-check ok" in out
+    assert "1 align" in out
+
+
+def test_csc_missing_align_row_fails(tmp_path, csc, capsys):
+    # a smoke artifact without the distributed-alignment row means the
+    # distribution axis was silently dropped — CI must fail, not pass
+    records = [r for r in _valid_artifact() if r["op"] != "align"]
+    path = _write(tmp_path / "bench.json", records)
+    assert csc.main([path]) == 1
+    assert "no align[*/shard_map] rows found" in capsys.readouterr().out
+
+
+def test_csc_align_word_mismatch_fails(tmp_path, csc, capsys):
+    records = _valid_artifact()
+    records[-1]["derived"] = \
+        "exchange_words_align=300;model_words_align=600"
+    path = _write(tmp_path / "bench.json", records)
+    assert csc.main([path]) == 1
+    assert "exchange_words_align=300" in capsys.readouterr().out
+
+
+def test_csc_missing_align_fields_fails(tmp_path, csc, capsys):
+    records = _valid_artifact()
+    records[-1]["derived"] = "bucket=512"
+    path = _write(tmp_path / "bench.json", records)
+    assert csc.main([path]) == 1
+    assert "missing exchange_words_align" in capsys.readouterr().out
+
+
+def test_csc_degenerate_p1_rows_pass(tmp_path, csc):
+    # P == 1: every exchange degenerates, both sides exactly 0
+    records = [
+        _comm_row("contigs", "n256",
+                  "exchange_words_sort=0;model_words_sort=0"),
+        _comm_row("overlap", "ring_1x1",
+                  "exchange_words_summa=0;model_words_summa=0"),
+        _comm_row("align", "bucket512_P1",
+                  "exchange_words_align=0;model_words_align=0"),
+    ]
+    path = _write(tmp_path / "bench.json", records)
+    assert csc.main([path]) == 0
