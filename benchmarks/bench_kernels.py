@@ -49,11 +49,14 @@ def run(backend: str = "both"):
                       jnp.asarray(r_ != c_), n_rows=n, n_cols=n,
                       capacity=3 * deg, semiring=SR)
     t_spt = timed(
+        # repro: noqa[R001] — benchmark: program built once per bench
+        # config; timed() reports compile vs steady-state separately.
         jax.jit(lambda: spgemm(mat, mat, semiring=SR, capacity=64)[0].cols)
     )
     t_sp = t_spt.steady_us
     dense_ref = dispatch("minplus_dense", "reference")
     dense = mat.to_dense(SR)
+    # repro: noqa[R001] — benchmark: jit built once per measurement.
     t_dt = timed(jax.jit(lambda: dense_ref(dense, dense)), reps=1)
     t_d = t_dt.steady_us
     rows.append(("kernels/ell_spgemm_minplus_n1024", t_sp,
@@ -68,6 +71,7 @@ def run(backend: str = "both"):
     mp_times = {}
     for be in backends:
         f = dispatch("minplus_dense", be)
+        # repro: noqa[R001] — benchmark: one jit per backend under test.
         t = timed(jax.jit(lambda f=f: f(a, a)))
         mp_times[be] = t.steady_us
         mode = ("interpret" if be == "pallas" and resolve_interpret("auto")
@@ -89,6 +93,7 @@ def run(backend: str = "both"):
             jnp.zeros(e2, jnp.int32))
     xd_times = {}
     for be in backends:
+        # repro: noqa[R001] — benchmark: one jit per backend under test.
         f = jax.jit(lambda be=be: batch_extend(
             *args, k=15, band=33, max_steps=1200, backend=be).score)
         t = timed(f)

@@ -1,44 +1,38 @@
 #!/usr/bin/env python
-"""Markdown link checker for the repo's docs surface.
+"""Markdown link checker — thin shim over rule D002 of ``repro.analysis``.
 
-Resolves every relative ``[text](target)`` link in README.md, DESIGN.md,
-ROADMAP.md and docs/*.md against the working tree and fails if a target file
-does not exist.  External (``http(s)://``) links are syntax-checked only —
-CI must stay hermetic.  Anchors (``file.md#section``) are checked for the
-file part.
+PR 10 folded the link resolution (relative ``[text](target)`` links must
+exist; external links syntax-checked only so CI stays hermetic; anchors
+checked for the file part) into
+``repro.analysis.rules.d002_doc_links``; this wrapper keeps the old entry
+point and output format alive for the CI docs job and tests/test_docs.py.
 
     python scripts/check_docs_links.py [files...]
 
-Exit status 1 with one ``path: broken link -> target`` per failure; CI runs
-this in the docs job, tests/test_docs.py runs it in tier-1.
+Exit status 1 with one ``path: broken link -> target`` per failure.  The
+full suite is ``python -m repro.analysis check``.
 """
 
 from __future__ import annotations
 
-import re
 import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
 
-DEFAULT_TARGETS = ["README.md", "DESIGN.md", "ROADMAP.md", "docs"]
+from repro.analysis.rules.d002_doc_links import (  # noqa: E402
+    DEFAULT_DOC_ROOTS,
+    broken_links,
+)
 
-# [text](target) — excludes images' alt-text brackets by allowing them too
-_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+#: old name for the rule's docs surface, kept for importers.
+DEFAULT_TARGETS = DEFAULT_DOC_ROOTS
 
 
 def check_file(path: Path) -> list:
     """Return the broken relative link targets of one markdown file."""
-    broken = []
-    for target in _LINK_RE.findall(path.read_text()):
-        if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, https:, mailto:
-            continue
-        if target.startswith("#"):  # in-page anchor
-            continue
-        rel = target.split("#", 1)[0]
-        if not (path.parent / rel).exists():
-            broken.append(target)
-    return broken
+    return [t for _, t in broken_links(path.read_text(), path.parent)]
 
 
 def main(argv) -> int:

@@ -34,6 +34,13 @@ from __future__ import annotations
 import json
 import re
 import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+# the (op, measured, model) triples under contract: the single source
+# shared with check_trace.py and analysis rule R003 (PR 10).
+from repro.analysis.contracts import COMM_CONTRACTS  # noqa: E402
 
 TOL = 0.10
 
@@ -44,11 +51,7 @@ def _field(derived: str, key: str) -> int | None:
 
 
 # one (measured, model) field pair per shard_map phase under contract
-_CONTRACTS = (
-    ("contigs", "exchange_words_sort", "model_words_sort"),
-    ("overlap", "exchange_words_summa", "model_words_summa"),
-    ("align", "exchange_words_align", "model_words_align"),
-)
+_CONTRACTS = COMM_CONTRACTS
 
 
 def _shard_rows(records, op: str) -> list:

@@ -35,10 +35,13 @@ from __future__ import annotations
 
 import json
 import sys
+from pathlib import Path
 
-# Algorithm 1 stage order; every name must appear among the roots, in order.
-STAGES = ("CountKmer", "CreateSpMat", "SpGEMM", "Alignment", "BuildR",
-          "TrReduction", "Contigs", "Consensus")
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+# Algorithm 1 stage order and per-stage phase contract: the single source
+# shared with check_smoke_comm.py and analysis rule R003 (PR 10).
+from repro.analysis.contracts import STAGE_PHASES, STAGES  # noqa: E402
 
 
 def _walk(node, depth=0):
@@ -70,29 +73,22 @@ def check(tree) -> list:
         failures.append(f"stage roots out of Algorithm 1 order: {roots}")
 
     by_name = {n["name"]: n for n in tree}
-    spgemm = by_name.get("SpGEMM")
-    if spgemm is not None:
-        phases = _phases(spgemm)
-        if "ring_stage" not in phases:
-            failures.append(
-                "SpGEMM stage has no phase='ring_stage' descendant — the "
-                f"explicit-exchange ring was not traced (phases: {phases})")
-        for ph in ("skew", "ring", "collect_merge"):
-            if ph not in phases:
-                failures.append(f"SpGEMM stage missing phase={ph!r} span")
-    contigs = by_name.get("Contigs")
-    if contigs is not None:
-        phases = _phases(contigs)
-        for ph in ("chain_stage", "cut", "doubling", "sort"):
-            if ph not in phases:
-                failures.append(f"Contigs stage missing phase={ph!r} span")
-    align = by_name.get("Alignment")
-    if align is not None:
-        phases = _phases(align)
-        for ph in ("pair_exchange", "gather_reads", "extend",
-                   "scatter_scores"):
-            if ph not in phases:
-                failures.append(f"Alignment stage missing phase={ph!r} span")
+    for stage, required in STAGE_PHASES.items():
+        node = by_name.get(stage)
+        if node is None:
+            continue  # the missing root is already reported above
+        phases = _phases(node)
+        for ph in required:
+            if ph in phases:
+                continue
+            if stage == "SpGEMM" and ph == "ring_stage":
+                failures.append(
+                    "SpGEMM stage has no phase='ring_stage' descendant — "
+                    "the explicit-exchange ring was not traced "
+                    f"(phases: {phases})")
+            else:
+                failures.append(
+                    f"{stage} stage missing phase={ph!r} span")
 
     for root in tree:
         if root["name"] not in STAGES:

@@ -1,23 +1,18 @@
 #!/usr/bin/env python
-"""Docstring lint: a dependency-free pydocstyle/ruff-D subset.
+"""Docstring lint — thin shim over rule D001 of ``repro.analysis``.
 
-Enforced rules (on the module list below — the public-API surface the docs
-satellite of DESIGN.md §2.9 hardened):
-
-  D100  module must have a docstring
-  D101  public class must have a docstring
-  D102  public method must have a docstring
-  D103  public function must have a docstring
-  D419  docstring must be non-empty
-
-"Public" = name without a leading underscore, at module or class top level.
-``@overload``/``@property`` setters and nested defs are out of scope.  Run
-from the repo root:
+PR 10 folded the dependency-free pydocstyle subset (D100/D101/D102/D103,
+empty docstrings rejected) into
+``repro.analysis.rules.d001_docstrings``; this wrapper keeps the old entry
+point and output format alive for the CI docs job and tests/test_docs.py.
+The canonical target list now lives on the rule module.  Run from the repo
+root:
 
     python scripts/lint_docstrings.py [files...]
 
-Exit status 1 with one ``path:line: CODE message`` per violation; CI runs
-this in the docs job, tests/test_docs.py runs it in tier-1.
+Exit status 1 with one ``path:line: CODE message`` per violation.  The
+full suite (this rule plus the trace-safety rules) is
+``python -m repro.analysis check``.
 """
 
 from __future__ import annotations
@@ -27,80 +22,25 @@ import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
 
-# the modules whose public APIs carry the documented contracts (PR 5 widened
-# the scope to the TR module — its TRStats.backend accounting is contractual
-# — and the smoke-artifact checker scripts; PR 6 adds the ring-SUMMA module
-# and the fused SpGEMM kernel family; PR 7 adds the observability layer —
-# its span/metrics/export surfaces are the contract docs/observability.md
-# documents — plus the trace checker and the shared benchmark timer; PR 8
-# adds the HBM watermark module, the experiment engine and its CLI)
-DEFAULT_TARGETS = [
-    "src/repro/core/align_dist.py",
-    "src/repro/core/components.py",
-    "src/repro/core/components_dist.py",
-    "src/repro/core/backend.py",
-    "src/repro/core/summa.py",
-    "src/repro/core/transitive_reduction.py",
-    "src/repro/assembly/contig_gen.py",
-    "src/repro/kernels/cc/ref.py",
-    "src/repro/kernels/cc/cc.py",
-    "src/repro/kernels/cc/ops.py",
-    "src/repro/kernels/spgemm/ref.py",
-    "src/repro/kernels/spgemm/spgemm.py",
-    "src/repro/kernels/spgemm/ops.py",
-    "src/repro/obs/trace.py",
-    "src/repro/obs/metrics.py",
-    "src/repro/obs/schema.py",
-    "src/repro/obs/export.py",
-    "src/repro/obs/memory.py",
-    "src/repro/obs/experiments.py",
-    "benchmarks/_timing.py",
-    "benchmarks/engine.py",
-    "scripts/check_smoke_comm.py",
-    "scripts/check_bench_regression.py",
-    "scripts/check_trace.py",
-    "scripts/lint_docstrings.py",
-]
+from repro.analysis.rules.d001_docstrings import (  # noqa: E402
+    TARGETS,
+    lint_tree,
+)
 
-
-def _has_docstring(node) -> bool:
-    doc = ast.get_docstring(node, clean=False)
-    return bool(doc and doc.strip())
+#: old name for the rule's curated module list, kept for importers.
+DEFAULT_TARGETS = TARGETS
 
 
 def lint_file(path: Path) -> list:
     """Return ``(lineno, code, message)`` violations for one file."""
     tree = ast.parse(path.read_text(), filename=str(path))
-    out = []
-    if not _has_docstring(tree):
-        out.append((1, "D100", "missing module docstring"))
-
-    def walk(node, in_class):
-        for child in ast.iter_child_nodes(node):
-            if isinstance(child, ast.ClassDef):
-                if not child.name.startswith("_") and not _has_docstring(child):
-                    out.append(
-                        (child.lineno, "D101",
-                         f"missing class docstring: {child.name}")
-                    )
-                walk(child, in_class=True)
-            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
-                if not child.name.startswith("_") and not _has_docstring(child):
-                    code = "D102" if in_class else "D103"
-                    kind = "method" if in_class else "function"
-                    out.append(
-                        (child.lineno, code,
-                         f"missing {kind} docstring: {child.name}")
-                    )
-                # nested defs are implementation detail: not walked
-
-    walk(tree, in_class=False)
-    return out
+    return [(lineno, code, msg) for lineno, code, msg, _ in lint_tree(tree)]
 
 
 def main(argv) -> int:
-    """Lint the given files (or the default target list); 0 = clean."""
+    """Lint the given files (or the D001 target list); 0 = clean."""
     targets = [Path(a) for a in argv] or [REPO / t for t in DEFAULT_TARGETS]
     failed = 0
     for t in targets:

@@ -1,0 +1,38 @@
+"""AST-based static-analysis suite for the repo's JAX/Pallas contracts.
+
+The pipeline's correctness rests on conventions the compiler cannot check:
+every ``ppermute`` must flow into the exchange accounting that
+``bench_comm_model`` cross-checks, every emitted metric must be registered
+in ``obs/schema.py``, jitted shard_map programs must be built once, and
+Pallas kernels must not capture module-level ``jnp`` constants.  Each rule
+here encodes one of those contracts as a stdlib-``ast`` pass distilled from
+a real bug in this repo's history (docs/static-analysis.md has the
+catalog); the suite is the third CI gate beside the comm-model and trace
+checkers::
+
+    python -m repro.analysis check [paths...] [--rule R001] \
+        [--baseline analysis_baseline.json] [--json findings.json]
+
+Intentional exceptions carry an inline ``# repro: noqa[RULE]`` with a
+justification; justified legacy findings ride in the committed baseline.
+No third-party imports anywhere in this package: it runs in the
+dependency-free CI docs job.
+"""
+
+from .engine import (
+    Finding,
+    RunResult,
+    load_baseline,
+    load_rules,
+    run,
+    write_baseline,
+)
+
+__all__ = [
+    "Finding",
+    "RunResult",
+    "load_baseline",
+    "load_rules",
+    "run",
+    "write_baseline",
+]

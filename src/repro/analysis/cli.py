@@ -1,0 +1,97 @@
+"""Command-line front end: ``python -m repro.analysis check``.
+
+Exit status 0 when every finding is suppressed (inline noqa) or baselined;
+1 when live findings remain; 2 on usage errors.  ``--json`` writes the
+machine-readable findings artifact CI uploads; ``--write-baseline``
+regenerates the committed baseline from the current tree (run it after
+justifying, not instead of fixing).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from . import engine
+from .rules import ALL_RULES
+from .rules.d002_doc_links import DEFAULT_DOC_ROOTS
+
+#: directories walked when ``check`` is given no paths: the code surface
+#: the CI gate covers plus the docs surface D002 needs.
+DEFAULT_PATHS = ["src", "benchmarks", "scripts"] + DEFAULT_DOC_ROOTS
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description=__doc__.splitlines()[0],
+    )
+    sub = ap.add_subparsers(dest="command", required=True)
+    chk = sub.add_parser("check", help="run the rules and report findings")
+    chk.add_argument("paths", nargs="*", default=None,
+                     help="files/dirs to check (default: src benchmarks "
+                          "scripts + docs surface)")
+    chk.add_argument("--rule", action="append", dest="rules", metavar="ID",
+                     help="run only this rule id (repeatable)")
+    chk.add_argument("--baseline", type=Path, default=None,
+                     help="committed baseline JSON; matching findings do "
+                          "not fail the run")
+    chk.add_argument("--json", type=Path, default=None, dest="json_out",
+                     help="write the findings artifact to this path")
+    chk.add_argument("--write-baseline", type=Path, default=None,
+                     help="write the current findings as a new baseline "
+                          "and exit 0")
+    chk.add_argument("--list-rules", action="store_true",
+                     help="print the rule catalog and exit")
+    return ap
+
+
+def main(argv=None) -> int:
+    """Entry point; returns the process exit status."""
+    args = _build_parser().parse_args(argv)
+    if args.list_rules:
+        for mod in ALL_RULES:
+            print(f"{mod.RULE_ID}  {mod.TITLE}")
+        return 0
+
+    paths = args.paths or [str(engine.REPO / p) for p in DEFAULT_PATHS
+                           if (engine.REPO / p).exists()]
+    try:
+        result = engine.run(
+            paths, rules=args.rules, baseline=args.baseline,
+        )
+    except (ValueError, FileNotFoundError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    if args.json_out:
+        args.json_out.write_text(json.dumps({
+            "version": engine.BASELINE_VERSION,
+            "rules": list(result.rules),
+            "files": result.files,
+            "suppressed": result.suppressed,
+            "baselined": result.baselined,
+            "findings": [f.to_json() for f in result.findings],
+        }, indent=2) + "\n")
+
+    if args.write_baseline:
+        engine.write_baseline(args.write_baseline, result.findings)
+        print(f"wrote {len(result.findings)} finding(s) to baseline "
+              f"{args.write_baseline}")
+        return 0
+
+    for f in result.findings:
+        print(f.render())
+        if f.hint:
+            print(f"    hint: {f.hint}")
+    tail = (f"{result.files} files, {len(result.rules)} rules, "
+            f"{result.suppressed} noqa-suppressed, "
+            f"{result.baselined} baselined")
+    if result.findings:
+        print(f"{len(result.findings)} finding(s) ({tail})",
+              file=sys.stderr)
+        return 1
+    print(f"analysis clean ({tail})")
+    return 0

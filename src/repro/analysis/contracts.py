@@ -1,0 +1,69 @@
+"""Single source of truth for the repo's observability and comm contracts.
+
+Three CI gates used to carry private copies of these tables —
+``scripts/check_trace.py`` hardcoded the Algorithm 1 stage order and the
+per-stage required phase spans, ``scripts/check_smoke_comm.py`` hardcoded
+the (measured, model) exchange-word field pairs — and the static-analysis
+rule ``R003`` (unaccounted-exchange) needs the same vocabulary to know
+which accumulators count as exchange accounting.  They all import from
+here now, so adding a distributed phase means editing one table and every
+checker follows.
+
+Everything in this module is stdlib-only data: it must be importable both
+from the dependency-free CI docs job (``python -m repro.analysis``) and
+from the gate scripts, which are loaded by file path outside any package.
+"""
+
+from __future__ import annotations
+
+#: Algorithm 1 stage order — every name must appear among the root spans of
+#: an exported pipeline trace, in this order (docs/observability.md).
+STAGES = (
+    "CountKmer",
+    "CreateSpMat",
+    "SpGEMM",
+    "Alignment",
+    "BuildR",
+    "TrReduction",
+    "Contigs",
+    "Consensus",
+)
+
+#: Required ``kind="phase"`` descendant spans per stage root span: the
+#: explicit-exchange schedule each distributed stage must actually trace
+#: (DESIGN.md §2.10-§2.12).  Stages absent from this table have no phase
+#: contract.
+STAGE_PHASES = {
+    "SpGEMM": ("skew", "ring", "ring_stage", "collect_merge"),
+    "Contigs": ("chain_stage", "cut", "doubling", "sort"),
+    "Alignment": ("pair_exchange", "gather_reads", "extend",
+                  "scatter_scores"),
+}
+
+#: Comm-model cross-check contract: one (benchmark op, measured stats field,
+#: analytic model field) triple per shard_map phase whose exchange volume is
+#: data-independent and therefore must match the ``bench_comm_model``
+#: prediction exactly (docs/communication.md).
+COMM_CONTRACTS = (
+    ("contigs", "exchange_words_sort", "model_words_sort"),
+    ("overlap", "exchange_words_summa", "model_words_summa"),
+    ("align", "exchange_words_align", "model_words_align"),
+)
+
+#: ``jax.lax`` collectives that move data between devices and therefore fall
+#: under the exchange-accounting contract: every call site in an
+#: explicit-exchange module must be covered by an accounting increment or an
+#: analytic ``exchange_words_*`` model (rule R003).
+COLLECTIVE_OPS = ("ppermute", "psum", "pmax", "pmin", "all_gather",
+                  "all_to_all")
+
+#: Names that count as exchange accounting at a collective call site: the
+#: trace-time accumulator dict incremented next to each ``ppermute``
+#: (``core/summa.py`` / ``core/align_dist.py`` convention) ...
+ACCOUNTING_ACCUMULATORS = ("acct",)
+
+#: ... and the analytic per-phase word-count helpers whose results flow into
+#: the ``exchange_words_*`` stats keys (``core/components_dist.py``
+#: convention — the schedule is data-independent, so the model IS the
+#: measurement).
+ACCOUNTING_CALL_PREFIXES = ("exchange_words", "words_")

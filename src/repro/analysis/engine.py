@@ -1,0 +1,333 @@
+"""Rule engine of the repro static-analysis suite (docs/static-analysis.md).
+
+A *rule* is a module under ``repro.analysis.rules`` exporting
+
+* ``RULE_ID`` — short stable id (``"R001"``, ``"D002"``),
+* ``TITLE`` — one-line description shown by ``--list-rules``,
+* ``HINT`` — the fix hint appended to every finding,
+* ``SUFFIXES`` — file suffixes the rule consumes (``(".py",)`` /
+  ``(".md",)``),
+* ``check(ctx, project)`` — yields :class:`Finding` objects for one file.
+
+The engine owns everything around the rules: walking the target paths,
+parsing each Python file once into a shared :class:`FileContext`, inline
+``# repro: noqa[RULE]`` suppressions, the committed JSON baseline that lets
+justified legacy findings ride without blocking CI, and the findings model
+(repo-relative ``file:line`` + rule id + message + fix hint).
+
+Everything here is stdlib-only (``ast``, ``json``, ``re``): the suite runs
+in the dependency-free CI docs job, where ``jax`` is not installed — rules
+that need repo metadata (the ``obs/schema.py`` metric registry, say) read
+it by parsing source, never by importing it.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+#: repo root (engine lives at src/repro/analysis/engine.py).
+REPO = Path(__file__).resolve().parents[3]
+
+#: directory names never walked for target files.
+_SKIP_DIRS = {"__pycache__", ".git", ".bench_cache", ".pytest_cache",
+              "node_modules"}
+
+#: inline suppression: ``# repro: noqa[R001]`` / ``# repro: noqa[R001,D002]``
+#: on the finding's line, or in the comment-only block directly above it
+#: (room for the one-line justification every suppression must carry).
+_NOQA_RE = re.compile(r"#\s*repro:\s*noqa\[([A-Za-z0-9,\s]+)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation: where, what, and how to fix it.
+
+    ``context`` is the enclosing symbol (function/class qualname, or
+    ``"<module>"``) — it keys the baseline together with ``path``, ``rule``
+    and ``message`` so baselined findings survive unrelated line drift."""
+
+    path: str  # repo-relative, "/"-separated
+    line: int
+    rule: str
+    message: str
+    hint: str = ""
+    context: str = "<module>"
+
+    def key(self) -> Tuple[str, str, str, str]:
+        """The line-number-free identity used for baseline matching."""
+        return (self.path, self.rule, self.context, self.message)
+
+    def to_json(self) -> Dict[str, Any]:
+        """JSON-artifact shape (one dict per finding)."""
+        return {
+            "path": self.path,
+            "line": self.line,
+            "rule": self.rule,
+            "message": self.message,
+            "hint": self.hint,
+            "context": self.context,
+        }
+
+    def render(self) -> str:
+        """``path:line: RULE message`` — the CLI output line."""
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+class FileContext:
+    """One target file, parsed once and shared by every rule.
+
+    Lazily exposes the AST (``tree``), a child→parent node map
+    (``parents``), and the source lines; Python files that fail to parse
+    produce a synthetic ``E999`` finding instead of crashing the run."""
+
+    def __init__(self, path: Path, repo: Path = REPO):
+        self.path = path
+        self.repo = repo
+        self.rel = path.resolve().relative_to(repo).as_posix() \
+            if path.resolve().is_relative_to(repo) else path.as_posix()
+        self.text = path.read_text()
+        self.lines = self.text.splitlines()
+        self.suffix = path.suffix
+        self._tree: Optional[ast.AST] = None
+        self._parents: Optional[Dict[int, ast.AST]] = None
+        self.parse_error: Optional[SyntaxError] = None
+
+    @property
+    def tree(self) -> Optional[ast.AST]:
+        """The parsed module AST (None for non-Python or unparsable files)."""
+        if self._tree is None and self.suffix == ".py" \
+                and self.parse_error is None:
+            try:
+                self._tree = ast.parse(self.text, filename=str(self.path))
+            except SyntaxError as e:  # pragma: no cover - target repo parses
+                self.parse_error = e
+        return self._tree
+
+    @property
+    def parents(self) -> Dict[int, ast.AST]:
+        """Map ``id(child node) -> parent node`` over the whole tree."""
+        if self._parents is None:
+            self._parents = {}
+            if self.tree is not None:
+                for node in ast.walk(self.tree):
+                    for child in ast.iter_child_nodes(node):
+                        self._parents[id(child)] = node
+        return self._parents
+
+    def enclosing_functions(self, node: ast.AST) -> List[ast.AST]:
+        """Function defs containing ``node``, innermost first."""
+        out = []
+        cur = self.parents.get(id(node))
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out.append(cur)
+            cur = self.parents.get(id(cur))
+        return out
+
+    def qualname(self, node: ast.AST) -> str:
+        """Dotted name of the scope holding ``node`` (``"<module>"`` at top
+        level) — the baseline ``context`` component."""
+        names = []
+        cur = self.parents.get(id(node))
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.ClassDef)):
+                names.append(cur.name)
+            cur = self.parents.get(id(cur))
+        return ".".join(reversed(names)) or "<module>"
+
+    def noqa_rules(self, line: int) -> frozenset:
+        """Rule ids suppressed at physical ``line`` (1-based).
+
+        Looks at the line itself plus the contiguous comment-only block
+        right above it, so justifications too long for a trailing comment
+        can ride in a lead comment."""
+        rules: set = set()
+        idx = line - 1
+        if not (0 <= idx < len(self.lines)):
+            return frozenset()
+        candidates = [self.lines[idx]]
+        j = idx - 1
+        while j >= 0 and self.lines[j].lstrip().startswith("#"):
+            candidates.append(self.lines[j])
+            j -= 1
+        for text in candidates:
+            m = _NOQA_RE.search(text)
+            if m:
+                rules.update(
+                    s.strip().upper() for s in m.group(1).split(",")
+                    if s.strip()
+                )
+        return frozenset(rules)
+
+
+class Project:
+    """Run-wide shared state handed to every rule.
+
+    Carries the repo root plus lazily-built caches rules share — e.g. the
+    metric registry AST-parsed from ``obs/schema.py`` (rule R004) — so a
+    rule never pays its setup cost per file."""
+
+    def __init__(self, repo: Path = REPO):
+        self.repo = repo
+        self._caches: Dict[str, Any] = {}
+
+    def cache(self, key: str, build) -> Any:
+        """Memoize ``build()`` under ``key`` for the lifetime of the run."""
+        if key not in self._caches:
+            self._caches[key] = build()
+        return self._caches[key]
+
+
+def load_rules(only: Optional[Sequence[str]] = None) -> List[Any]:
+    """The registered rule modules, optionally filtered to ids in ``only``.
+
+    Unknown ids in ``only`` raise — a typo'd ``--rule R01`` must fail, not
+    silently check nothing."""
+    from .rules import ALL_RULES
+
+    if only is None:
+        return list(ALL_RULES)
+    wanted = {r.upper() for r in only}
+    known = {m.RULE_ID for m in ALL_RULES}
+    unknown = wanted - known
+    if unknown:
+        raise ValueError(
+            f"unknown rule id(s) {sorted(unknown)}; known: {sorted(known)}"
+        )
+    return [m for m in ALL_RULES if m.RULE_ID in wanted]
+
+
+def walk_targets(paths: Sequence[Path], suffixes: Iterable[str]) -> List[Path]:
+    """Expand files/dirs into the sorted target file list.
+
+    Directories are walked recursively for the given suffixes; explicit
+    file arguments are kept regardless of suffix filters so one-off checks
+    of a single file always see it."""
+    suffixes = set(suffixes)
+    out: List[Path] = []
+    for p in paths:
+        if p.is_dir():
+            for f in sorted(p.rglob("*")):
+                if f.suffix in suffixes and f.is_file() \
+                        and not _skipped(f, p):
+                    out.append(f)
+        elif p.is_file():
+            out.append(p)
+        else:
+            raise FileNotFoundError(f"no such target: {p}")
+    seen, uniq = set(), []
+    for f in out:
+        r = f.resolve()
+        if r not in seen:
+            seen.add(r)
+            uniq.append(f)
+    return uniq
+
+
+def _skipped(f: Path, root: Path) -> bool:
+    return any(part in _SKIP_DIRS or part.startswith(".")
+               for part in f.relative_to(root).parts[:-1])
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Outcome of one engine run: live findings plus suppression tallies."""
+
+    findings: List[Finding]
+    suppressed: int = 0  # inline-noqa'd
+    baselined: int = 0  # matched the committed baseline
+    files: int = 0
+    rules: Tuple[str, ...] = ()
+
+    @property
+    def ok(self) -> bool:
+        """True when no non-baselined, non-suppressed finding remains."""
+        return not self.findings
+
+
+def run(
+    paths: Sequence[Path],
+    *,
+    rules: Optional[Sequence[str]] = None,
+    baseline: Optional[Path] = None,
+    repo: Path = REPO,
+) -> RunResult:
+    """Run the suite over ``paths`` and return the :class:`RunResult`.
+
+    Explicit-file arguments are marked on their context (rules like D001
+    that scope themselves to a curated target list still check a file the
+    user named directly).  Findings on a ``# repro: noqa[RULE]`` line are
+    suppressed; findings whose :meth:`Finding.key` appears in ``baseline``
+    are counted but not returned."""
+    mods = load_rules(rules)
+    suffixes = {s for m in mods for s in m.SUFFIXES}
+    files = walk_targets([Path(p) for p in paths], suffixes)
+    explicit = {Path(p).resolve() for p in paths if Path(p).is_file()}
+    project = Project(repo)
+    base_keys = load_baseline(baseline) if baseline else frozenset()
+
+    findings: List[Finding] = []
+    suppressed = baselined = 0
+    for f in files:
+        ctx = FileContext(f, repo)
+        ctx.explicit = f.resolve() in explicit  # type: ignore[attr-defined]
+        for mod in mods:
+            if ctx.suffix not in mod.SUFFIXES:
+                continue
+            for finding in mod.check(ctx, project):
+                if finding.rule in ctx.noqa_rules(finding.line):
+                    suppressed += 1
+                elif finding.key() in base_keys:
+                    baselined += 1
+                else:
+                    findings.append(finding)
+    findings.sort(key=lambda x: (x.path, x.line, x.rule))
+    return RunResult(
+        findings=findings, suppressed=suppressed, baselined=baselined,
+        files=len(files), rules=tuple(m.RULE_ID for m in mods),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Baseline file: committed JSON of justified legacy findings.
+# ---------------------------------------------------------------------------
+
+BASELINE_VERSION = 1
+
+
+def load_baseline(path: Path) -> frozenset:
+    """The set of baselined :meth:`Finding.key` tuples from a baseline file.
+
+    A missing file is an error (CI pointing at a renamed baseline must
+    fail loudly); an empty findings list is fine."""
+    doc = json.loads(Path(path).read_text())
+    if doc.get("version") != BASELINE_VERSION:
+        raise ValueError(
+            f"{path}: unsupported baseline version {doc.get('version')!r}"
+        )
+    return frozenset(
+        (e["path"], e["rule"], e.get("context", "<module>"), e["message"])
+        for e in doc.get("findings", ())
+    )
+
+
+def write_baseline(path: Path, findings: Iterable[Finding]) -> None:
+    """Write ``findings`` as a baseline file (sorted, line-number-free)."""
+    entries = sorted(
+        (
+            {"path": f.path, "rule": f.rule, "context": f.context,
+             "message": f.message}
+            for f in findings
+        ),
+        key=lambda e: (e["path"], e["rule"], e["context"], e["message"]),
+    )
+    Path(path).write_text(
+        json.dumps({"version": BASELINE_VERSION, "findings": entries},
+                   indent=2) + "\n"
+    )

@@ -1,0 +1,29 @@
+"""Rule registry: every shipped rule module, in id order.
+
+Explicit imports (not filesystem discovery) keep the set deterministic and
+the docs honest: a rule exists iff it is listed here, and
+``python -m repro.analysis check --list-rules`` prints exactly this table.
+"""
+
+from . import (
+    r001_retrace,
+    r002_captured_constant,
+    r003_unaccounted_exchange,
+    r004_unregistered_metric,
+    r005_nondeterminism,
+    r006_host_sync,
+    d001_docstrings,
+    d002_doc_links,
+)
+
+#: the shipped rules, in the order findings cite them.
+ALL_RULES = (
+    r001_retrace,
+    r002_captured_constant,
+    r003_unaccounted_exchange,
+    r004_unregistered_metric,
+    r005_nondeterminism,
+    r006_host_sync,
+    d001_docstrings,
+    d002_doc_links,
+)

@@ -1,0 +1,72 @@
+"""Small shared AST helpers for the rule modules (stdlib ``ast`` only)."""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional, Tuple
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """The dotted name of a ``Name``/``Attribute`` chain (``"jax.lax.psum"``),
+    or None when the chain roots in something else (a call, a subscript)."""
+    parts = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.Call) -> Optional[str]:
+    """Dotted name of a call's callee (None for computed callees)."""
+    return dotted(node.func)
+
+
+def terminal(name: Optional[str]) -> str:
+    """Last component of a dotted name (``"jax.lax.psum"`` → ``"psum"``)."""
+    return name.rsplit(".", 1)[-1] if name else ""
+
+
+def walk_calls(tree: ast.AST) -> Iterator[ast.Call]:
+    """Every ``Call`` node under ``tree``."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            yield node
+
+
+def decorator_names(fn: ast.AST) -> Tuple[str, ...]:
+    """Terminal names of a function's decorators, unwrapping decorator
+    factories (``@lru_cache(maxsize=None)`` → ``"lru_cache"``) and
+    ``functools.partial(jax.jit, ...)`` (→ ``"jit"``)."""
+    out = []
+    for dec in getattr(fn, "decorator_list", ()):
+        target = dec
+        if isinstance(target, ast.Call):
+            callee = terminal(dotted(target.func))
+            if callee == "partial" and target.args:
+                target = target.args[0]
+            else:
+                target = target.func
+        name = dotted(target)
+        if name:
+            out.append(terminal(name))
+    return tuple(out)
+
+
+def references_name(tree: ast.AST, names) -> Iterator[ast.Name]:
+    """Every ``Name`` load of one of ``names`` under ``tree``."""
+    names = set(names)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load) \
+                and node.id in names:
+            yield node
+
+
+def str_const(node: ast.AST) -> Optional[str]:
+    """The value of a string constant node, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None

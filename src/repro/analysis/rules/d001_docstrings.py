@@ -1,0 +1,119 @@
+"""D001 public-API docstrings: the pydocstyle-subset lint as a rule.
+
+Folded in from ``scripts/lint_docstrings.py`` (PR 4), which remains a thin
+shim over this module so existing CI invocations and ``tests/test_docs.py``
+keep passing.  Codes (kept in the message for continuity):
+
+  D100  module must have a docstring
+  D101  public class must have a docstring
+  D102  public method must have a docstring
+  D103  public function must have a docstring
+
+"Public" = name without a leading underscore, at module or class top
+level; nested defs are implementation detail and not walked.
+
+Scope: the curated :data:`TARGETS` list — the public-API modules whose
+docstrings carry documented contracts — when walking directories; any
+Python file passed to the CLI *explicitly* is always checked, which is how
+the shim and the fixtures drive it.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..engine import Finding
+
+RULE_ID = "D001"
+TITLE = "missing public-API docstring (pydocstyle subset)"
+SUFFIXES = (".py",)
+HINT = "add a docstring stating the contract (see docs/static-analysis.md)"
+
+#: the modules whose public APIs carry the documented contracts (grown
+#: PR-by-PR; PR 10 adds the static-analysis suite itself — its engine,
+#: contracts and rule surfaces are the contract docs/static-analysis.md
+#: documents).
+TARGETS = [
+    "src/repro/core/align_dist.py",
+    "src/repro/core/components.py",
+    "src/repro/core/components_dist.py",
+    "src/repro/core/backend.py",
+    "src/repro/core/summa.py",
+    "src/repro/core/transitive_reduction.py",
+    "src/repro/assembly/contig_gen.py",
+    "src/repro/kernels/cc/ref.py",
+    "src/repro/kernels/cc/cc.py",
+    "src/repro/kernels/cc/ops.py",
+    "src/repro/kernels/spgemm/ref.py",
+    "src/repro/kernels/spgemm/spgemm.py",
+    "src/repro/kernels/spgemm/ops.py",
+    "src/repro/obs/trace.py",
+    "src/repro/obs/metrics.py",
+    "src/repro/obs/schema.py",
+    "src/repro/obs/export.py",
+    "src/repro/obs/memory.py",
+    "src/repro/obs/experiments.py",
+    "src/repro/analysis/engine.py",
+    "src/repro/analysis/cli.py",
+    "src/repro/analysis/contracts.py",
+    "src/repro/analysis/rules/r001_retrace.py",
+    "src/repro/analysis/rules/r002_captured_constant.py",
+    "src/repro/analysis/rules/r003_unaccounted_exchange.py",
+    "src/repro/analysis/rules/r004_unregistered_metric.py",
+    "src/repro/analysis/rules/r005_nondeterminism.py",
+    "src/repro/analysis/rules/r006_host_sync.py",
+    "src/repro/analysis/rules/d001_docstrings.py",
+    "src/repro/analysis/rules/d002_doc_links.py",
+    "benchmarks/_timing.py",
+    "benchmarks/engine.py",
+    "scripts/check_smoke_comm.py",
+    "scripts/check_bench_regression.py",
+    "scripts/check_trace.py",
+    "scripts/lint_docstrings.py",
+]
+
+
+def _has_docstring(node) -> bool:
+    doc = ast.get_docstring(node, clean=False)
+    return bool(doc and doc.strip())
+
+
+def lint_tree(tree: ast.Module):
+    """Yield ``(lineno, code, message, context)`` violations for one
+    parsed module — the old ``lint_file`` body, shared with the shim."""
+    if not _has_docstring(tree):
+        yield 1, "D100", "missing module docstring", "<module>"
+
+    def walk(node, in_class, prefix):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                qual = f"{prefix}{child.name}"
+                if not child.name.startswith("_") \
+                        and not _has_docstring(child):
+                    yield (child.lineno, "D101",
+                           f"missing class docstring: {child.name}", qual)
+                yield from walk(child, True, qual + ".")
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if not child.name.startswith("_") \
+                        and not _has_docstring(child):
+                    code = "D102" if in_class else "D103"
+                    kind = "method" if in_class else "function"
+                    yield (child.lineno, code,
+                           f"missing {kind} docstring: {child.name}",
+                           f"{prefix}{child.name}")
+                # nested defs are implementation detail: not walked
+
+    yield from walk(tree, False, "")
+
+
+def check(ctx, project):
+    """Yield a finding per missing docstring on an in-scope file."""
+    if ctx.tree is None:
+        return
+    if ctx.rel not in TARGETS and not getattr(ctx, "explicit", False):
+        return
+    for lineno, code, msg, context in lint_tree(ctx.tree):
+        yield Finding(
+            path=ctx.rel, line=lineno, rule=RULE_ID,
+            message=f"{code} {msg}", hint=HINT, context=context,
+        )

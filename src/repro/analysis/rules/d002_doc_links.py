@@ -1,0 +1,48 @@
+"""D002 markdown links: every relative link target must exist.
+
+Folded in from ``scripts/check_docs_links.py`` (PR 4), which remains a thin
+shim over this module.  External ``http(s)://`` links are syntax-checked
+only (CI stays hermetic); ``file.md#anchor`` links are checked for the file
+part; in-page ``#anchor`` links are skipped.
+"""
+
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+from ..engine import Finding
+
+RULE_ID = "D002"
+TITLE = "broken relative markdown link"
+SUFFIXES = (".md",)
+HINT = "fix the target path (links resolve relative to the linking file)"
+
+#: the docs surface walked when the CLI is given no explicit paths.
+DEFAULT_DOC_ROOTS = ["README.md", "DESIGN.md", "ROADMAP.md", "docs"]
+
+# [text](target) — excludes images' alt-text brackets by allowing them too
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def broken_links(text: str, base: Path):
+    """Yield ``(lineno, target)`` for every unresolvable relative link."""
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        for target in _LINK_RE.findall(line):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):
+                continue  # http:, https:, mailto:
+            if target.startswith("#"):
+                continue  # in-page anchor
+            rel = target.split("#", 1)[0]
+            if not (base / rel).exists():
+                yield lineno, target
+
+
+def check(ctx, project):
+    """Yield a finding per broken relative link in a markdown file."""
+    for lineno, target in broken_links(ctx.text, ctx.path.parent):
+        yield Finding(
+            path=ctx.rel, line=lineno, rule=RULE_ID,
+            message=f"broken link -> {target}", hint=HINT,
+            context="<module>",
+        )

@@ -1,0 +1,100 @@
+"""R001 retrace-hazard: per-call construction of a jitted/shard_map program.
+
+The bug this rule encodes (fixed in PR 7): ``core/summa.py`` built
+``jax.jit(shard_map(f))`` inside ``summa_ring`` on **every call**, so every
+overlap SpGEMM — and every pass of the ring transitive reduction driving it
+— re-traced and re-compiled the whole ring (~14 s/call in the committed
+``BENCH_6.json`` row).  A freshly-constructed callable (a closure defined in
+the function, or a new ``shard_map`` wrapper) has a new identity, so
+``jax.jit``'s cache can never hit.
+
+Flagged: a ``jax.jit(...)`` / ``shard_map(...)`` call inside a function
+body, unless an enclosing function is memoized (``functools.lru_cache`` /
+``cache`` decorator — the ``_ring_program`` pattern) or is a one-shot
+builder by naming convention (``make_*`` / ``build_*``), or the program is
+immediately AOT-lowered (``jax.jit(f).lower(...)`` — the dry-run path pays
+compilation on purpose).  Module-level construction is always fine, a
+``jit(shard_map(f))`` composite is reported once at the outer call, and a
+``shard_map(...)(args)`` invoked in the same expression is exempt: under
+the enclosing jitted step it is consumed at trace time (the model-layer
+idiom), so no per-call cache identity exists to miss.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..engine import Finding
+from ._ast_util import call_name, decorator_names, terminal, walk_calls
+
+RULE_ID = "R001"
+TITLE = "jit/shard_map program constructed per call (retrace hazard)"
+HINT = ("cache the built callable: move construction to module level or an "
+        "@functools.lru_cache program builder (core/summa._ring_program "
+        "pattern)")
+SUFFIXES = (".py",)
+
+_PROGRAM_BUILDERS = {"jit", "shard_map", "pjit"}
+_CACHED_DECORATORS = {"lru_cache", "cache"}
+_BUILDER_PREFIXES = ("make_", "build_", "_make_", "_build_")
+
+
+def _is_aot_lowered(ctx, call: ast.Call) -> bool:
+    """``jax.jit(...)`` whose result is immediately ``.lower()``ed."""
+    parent = ctx.parents.get(id(call))
+    return isinstance(parent, ast.Attribute) and parent.attr == "lower"
+
+
+def _is_builder_argument(ctx, call: ast.Call) -> bool:
+    """Inner half of ``jax.jit(shard_map(f))``: report the composite once,
+    at the outermost builder call."""
+    parent = ctx.parents.get(id(call))
+    return (isinstance(parent, ast.Call)
+            and terminal(call_name(parent)) in _PROGRAM_BUILDERS)
+
+
+def _is_invoked_shard_map(ctx, call: ast.Call, name: str) -> bool:
+    """``shard_map(f, ...)(args)`` invoked in the same expression.
+
+    Inside a function that is itself traced by an outer ``jax.jit`` (the
+    model forward / serve step), the wrapper is consumed at trace time and
+    becomes part of the enclosing program — construction identity never
+    reaches a jit cache.  ``jit(...)(args)`` gets no such pass: an
+    immediately-invoked jit re-traces eagerly on every call.
+    """
+    if name == "jit":
+        return False
+    parent = ctx.parents.get(id(call))
+    return isinstance(parent, ast.Call) and parent.func is call
+
+
+def check(ctx, project):
+    """Yield a finding per uncached program construction in ``ctx``."""
+    if ctx.tree is None:
+        return
+    for call in walk_calls(ctx.tree):
+        name = terminal(call_name(call))
+        if name not in _PROGRAM_BUILDERS:
+            continue
+        chain = ctx.enclosing_functions(call)
+        if not chain:
+            continue  # module level: constructed once at import
+        if any(set(decorator_names(fn)) & _CACHED_DECORATORS
+               for fn in chain):
+            continue  # memoized program builder
+        if any(fn.name.startswith(_BUILDER_PREFIXES) for fn in chain):
+            continue  # one-shot builder by convention: caller caches
+        if _is_aot_lowered(ctx, call):
+            continue  # AOT lowering pays compilation deliberately
+        if _is_builder_argument(ctx, call):
+            continue  # jit(shard_map(f)): reported once at the outer call
+        if _is_invoked_shard_map(ctx, call, name):
+            continue  # shard_map(...)(x): traced into the enclosing program
+        qual = ctx.qualname(call)
+        yield Finding(
+            path=ctx.rel, line=call.lineno, rule=RULE_ID,
+            message=(f"{name}(...) program constructed inside {qual}(): "
+                     "every call re-traces and re-compiles (the PR 7 "
+                     "summa_ring retrace bug)"),
+            hint=HINT, context=qual,
+        )

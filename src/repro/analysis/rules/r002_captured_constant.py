@@ -1,0 +1,103 @@
+"""R002 captured-device-constant: module-level ``jnp`` scalars in kernels.
+
+The bug this rule encodes (fixed in PR 6): ``core/spmat.py``-style
+module-level constants (``NO_COL = jnp.int32(-1)``, ``_NOPOS``, the merge
+``big``) were referenced from inside Pallas kernel bodies.  A module-level
+``jnp.*`` value is a **concrete device array**; captured by a
+``pallas_call`` kernel it becomes a constant the Mosaic lowering either
+rejects outright or silently materializes per-launch.  The fix is a plain
+Python/NumPy literal (``_BIG = 2**30`` in ``kernels/cc/cc.py``, ``np.int32``
+literals in ``core/spmat.py``).
+
+Scope: files under a ``kernels/`` package.  A *kernel body* is any function
+passed to ``pl.pallas_call`` (directly or through ``functools.partial``),
+plus any function named ``*_kernel`` (the repo's naming convention).
+Flagged: a load of a module-level name whose initializer contains a
+``jnp.*`` expression, from inside such a body.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..engine import Finding
+from ._ast_util import call_name, dotted, references_name, terminal, \
+    walk_calls
+
+RULE_ID = "R002"
+TITLE = "Pallas kernel captures a module-level jnp constant"
+SUFFIXES = (".py",)
+HINT = ("use a plain Python/numpy literal inside the kernel "
+        "(kernels/cc/cc.py's `_BIG = 2**30` pattern); jnp module constants "
+        "are device arrays the Mosaic lowering cannot capture")
+
+
+def _jnp_rooted(tree: ast.AST) -> bool:
+    """Whether any ``jnp.*`` / ``jax.numpy.*`` attribute occurs in ``tree``."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute):
+            name = dotted(node)
+            if name and (name.startswith("jnp.")
+                         or name.startswith("jax.numpy.")):
+                return True
+    return False
+
+
+def _module_jnp_constants(tree: ast.Module) -> dict:
+    """Module-level ``NAME = <expr containing jnp.*>`` assignments."""
+    out = {}
+    for stmt in tree.body:
+        targets = []
+        if isinstance(stmt, ast.Assign):
+            targets, value = stmt.targets, stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            targets, value = [stmt.target], stmt.value
+        else:
+            continue
+        if not _jnp_rooted(value):
+            continue
+        for t in targets:
+            if isinstance(t, ast.Name):
+                out[t.id] = stmt.lineno
+    return out
+
+
+def _kernel_functions(ctx) -> dict:
+    """name -> FunctionDef for every Pallas kernel body in the file."""
+    fns = {
+        node.name: node
+        for node in ast.walk(ctx.tree)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+    }
+    kernels = {name: fn for name, fn in fns.items()
+               if name.endswith("_kernel")}
+    for call in walk_calls(ctx.tree):
+        if terminal(call_name(call)) != "pallas_call" or not call.args:
+            continue
+        target = call.args[0]
+        # unwrap functools.partial(kernel_fn, ...)
+        if isinstance(target, ast.Call) \
+                and terminal(call_name(target)) == "partial" and target.args:
+            target = target.args[0]
+        name = dotted(target)
+        if name and terminal(name) in fns:
+            kernels[terminal(name)] = fns[terminal(name)]
+    return kernels
+
+
+def check(ctx, project):
+    """Yield a finding per jnp-constant load inside a kernel body."""
+    if ctx.tree is None or "kernels" not in ctx.rel.split("/"):
+        return
+    constants = _module_jnp_constants(ctx.tree)
+    if not constants:
+        return
+    for kname, fn in _kernel_functions(ctx).items():
+        for ref in references_name(fn, constants):
+            yield Finding(
+                path=ctx.rel, line=ref.lineno, rule=RULE_ID,
+                message=(f"Pallas kernel {kname}() captures module-level "
+                         f"jnp constant {ref.id!r} — the PR 6 pallas_call "
+                         "captured-constant bug"),
+                hint=HINT, context=kname,
+            )

@@ -1,0 +1,102 @@
+"""R003 unaccounted-exchange: a collective outside the accounting contract.
+
+The hazard this rule encodes (caught by review in PR 5): the repo's
+communication claims rest on *measured* exchange volumes —
+``exchange_words_*`` stats counted next to every ``ppermute`` (the ``acct``
+dict of ``core/summa._ring_program`` / ``core/align_dist._align_program``)
+or derived from the data-independent schedule by the analytic
+``exchange_words_*`` helpers of ``core/components_dist`` — and CI
+cross-checks them against ``bench_comm_model`` (the paper's Table I).  A
+``lax.ppermute`` added to an explicit-exchange module without touching the
+accounting silently breaks that contract: the model check still passes
+(both sides miss the new words) and hours of cluster time go unexplained.
+
+Scope: ``core/*_dist.py`` and ``core/summa.py`` (the explicit-exchange
+modules; the vocabulary lives in ``analysis.contracts``).  For each
+innermost function containing a ``jax.lax`` collective, the rule requires
+*somewhere in its enclosing function chain* either an ``acct[...]``-style
+accumulator increment or a call to an analytic ``exchange_words_*`` /
+``words_*`` model helper.  One finding per unaccounted function, anchored
+at its first collective call.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .. import contracts
+from ..engine import Finding
+from ._ast_util import call_name, dotted, terminal, walk_calls
+
+RULE_ID = "R003"
+TITLE = "collective call without exchange accounting"
+SUFFIXES = (".py",)
+HINT = ("count the exchange: increment the program's acct dict next to the "
+        "collective (summa._ring_program pattern) or extend the analytic "
+        "exchange_words_* model feeding the stats, so "
+        "bench_comm_model/check_smoke_comm keep cross-checking every word")
+
+
+def _in_scope(rel: str) -> bool:
+    parts = rel.split("/")
+    if "core" not in parts:
+        return False
+    name = parts[-1]
+    return name.endswith("_dist.py") or name == "summa.py"
+
+
+def _is_collective(call: ast.Call) -> bool:
+    name = call_name(call)
+    if not name or terminal(name) not in contracts.COLLECTIVE_OPS:
+        return False
+    # require a lax-rooted callee (jax.lax.psum / lax.ppermute), so local
+    # helpers that happen to share a name stay out of scope
+    return ".lax." in f".{name}." or name.startswith("lax.")
+
+
+def _accounts(tree: ast.AST) -> bool:
+    """Whether ``tree`` contains an exchange-accounting construct."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.AugAssign):
+            target = node.target
+            if isinstance(target, ast.Subscript):
+                base = dotted(target.value)
+                if base and terminal(base) in \
+                        contracts.ACCOUNTING_ACCUMULATORS:
+                    return True
+            if isinstance(target, ast.Name) and (
+                    "words" in target.id or "rounds" in target.id):
+                return True
+        elif isinstance(node, ast.Call):
+            callee = terminal(call_name(node))
+            if callee.startswith(contracts.ACCOUNTING_CALL_PREFIXES):
+                return True
+    return False
+
+
+def check(ctx, project):
+    """Yield one finding per function with unaccounted collectives."""
+    if ctx.tree is None or not _in_scope(ctx.rel):
+        return
+    by_fn = {}
+    for call in walk_calls(ctx.tree):
+        if not _is_collective(call):
+            continue
+        chain = ctx.enclosing_functions(call)
+        if not chain:
+            continue  # module-level collective: not a traced program
+        fn = chain[0]
+        by_fn.setdefault(id(fn), (fn, chain, []))[2].append(call)
+    for fn, chain, calls in by_fn.values():
+        if any(_accounts(f) for f in chain):
+            continue
+        first = min(calls, key=lambda c: c.lineno)
+        ops = sorted({terminal(call_name(c)) for c in calls})
+        qual = ctx.qualname(first)
+        yield Finding(
+            path=ctx.rel, line=first.lineno, rule=RULE_ID,
+            message=(f"{qual}() issues {', '.join(ops)} with no exchange "
+                     "accounting in its enclosing scope — the words move "
+                     "but exchange_words_* never sees them"),
+            hint=HINT, context=qual,
+        )

@@ -1,0 +1,109 @@
+"""R004 unregistered-metric: a stats key absent from the declared schema.
+
+The bug class this rule encodes (PR 5's present-and-zero fix, PR 7's
+registry): before ``obs/schema.py`` every emitter invented keys inline, and
+a typo'd or unregistered key surfaced only when a downstream consumer (a
+benchmark row diff, a test key tuple) happened to touch it — or never, as
+with the missing present-and-zero exchange stats on the gspmd path.  The
+``Metrics`` accumulator now validates at *run* time; this rule validates at
+*read* time, so an emission site that no test executes (an error path, a
+fallback branch) still cannot introduce an undeclared key.
+
+Checked sites: ``*.emit("key", ...)``, ``*.emit_many({...})`` and
+``validated({...})`` dict-literal keys against the registry, and
+``seed_zero`` / ``zero_defaults`` / ``group_keys`` string arguments against
+the declared zero groups.  The registry is **parsed** from
+``obs/schema.py`` (the ``_SPECS`` tuple), never imported — the analyzer
+runs where jax is not installed.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from ..engine import Finding
+from ._ast_util import call_name, str_const, terminal, walk_calls
+
+RULE_ID = "R004"
+TITLE = "stats key or zero-group not registered in obs/schema.py"
+SUFFIXES = (".py",)
+HINT = ("register the key in src/repro/obs/schema.py's _SPECS (kind + unit "
+        "+ description, and its present-and-zero group if it is an "
+        "exchange counter)")
+
+#: registry source, relative to the repo root.
+SCHEMA_PATH = "src/repro/obs/schema.py"
+
+_SPEC_BUILDERS = {"_c", "_g", "_l", "MetricSpec"}
+_KEY_SITES = {"emit"}
+_DICT_SITES = {"emit_many", "validated"}
+_GROUP_SITES = {"seed_zero", "zero_defaults", "group_keys"}
+
+
+def load_registry(repo: Path):
+    """Parse ``(metric names, zero groups)`` out of the schema source."""
+    tree = ast.parse((repo / SCHEMA_PATH).read_text(), filename=SCHEMA_PATH)
+    names, groups = set(), set()
+    for call in walk_calls(tree):
+        callee = terminal(call_name(call))
+        if callee not in _SPEC_BUILDERS or not call.args:
+            continue
+        name = str_const(call.args[0])
+        if name is None:
+            continue
+        names.add(name)
+        group = None
+        if callee == "_c" and len(call.args) >= 4:
+            group = str_const(call.args[3])
+        elif callee == "MetricSpec" and len(call.args) >= 5:
+            group = str_const(call.args[4])
+        for kw in call.keywords:
+            if kw.arg == "zero_group":
+                group = str_const(kw.value)
+        if group:
+            groups.add(group)
+    if not names:
+        raise ValueError(f"{SCHEMA_PATH}: no metric specs parsed — did the "
+                         "_SPECS registry move?")
+    return frozenset(names), frozenset(groups)
+
+
+def _registry(project):
+    return project.cache(
+        "metric_registry", lambda: load_registry(project.repo)
+    )
+
+
+def check(ctx, project):
+    """Yield a finding per unregistered key/group at an emission site."""
+    if ctx.tree is None or ctx.rel == SCHEMA_PATH:
+        return
+    names, groups = _registry(project)
+    for call in walk_calls(ctx.tree):
+        callee = terminal(call_name(call))
+        if callee in _KEY_SITES and call.args:
+            key = str_const(call.args[0])
+            if key is not None and key not in names:
+                yield _finding(ctx, call, f"stats key {key!r} is not "
+                               "registered in obs/schema.py")
+        elif callee in _DICT_SITES and call.args \
+                and isinstance(call.args[0], ast.Dict):
+            for k in call.args[0].keys:
+                key = str_const(k) if k is not None else None
+                if key is not None and key not in names:
+                    yield _finding(ctx, call, f"stats key {key!r} (in "
+                                   f"{callee}) is not registered in "
+                                   "obs/schema.py")
+        elif callee in _GROUP_SITES and call.args:
+            grp = str_const(call.args[0])
+            if grp is not None and grp not in groups:
+                yield _finding(ctx, call, f"zero-group {grp!r} (in "
+                               f"{callee}) is not a declared "
+                               "present-and-zero group")
+
+
+def _finding(ctx, call, message):
+    qual = ctx.qualname(call)
+    return Finding(path=ctx.rel, line=call.lineno, rule=RULE_ID,
+                   message=message, hint=HINT, context=qual)

@@ -1,0 +1,110 @@
+"""R005 nondeterminism: host-side entropy inside a traced program builder.
+
+The hazard: code inside a function handed to ``jax.jit`` / ``shard_map``
+runs at *trace* time.  A ``time.time()`` / ``random.*`` call there bakes
+one arbitrary host value into the compiled program — every later cached
+call silently reuses it — and worse, it changes per re-trace, so two runs
+of "the same" program differ and the seeded-determinism contract of
+``tests/test_align_dist.py`` (assemble() byte-identical across runs) breaks
+in ways that are invisible at the call site.  Iterating a ``set`` at trace
+time is the same bug through ordering: the trace order (and therefore the
+schedule and any order-dependent ⊕) varies per process hash seed.
+
+Scope: functions that are traced — decorated with ``jit``/``shard_map``
+(including ``functools.partial(jax.jit, ...)``), or passed by name to a
+``jit``/``shard_map`` call anywhere in the same file — and every function
+nested inside them.  Flagged inside: ``time.*`` clock calls, ``random.*`` /
+``np.random.*`` draws, ``uuid`` / ``os.urandom``, and ``for``-iteration
+over a ``set`` literal or ``set()`` call (wrap in ``sorted(...)`` to fix).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..engine import Finding
+from ._ast_util import call_name, decorator_names, dotted, terminal, \
+    walk_calls
+
+RULE_ID = "R005"
+TITLE = "nondeterministic host call inside a traced program"
+SUFFIXES = (".py",)
+HINT = ("hoist the value out of the traced function and pass it as an "
+        "argument (or a builder-cache key); iterate sorted(...) instead of "
+        "a raw set")
+
+_TRACERS = {"jit", "pjit", "shard_map"}
+
+_CLOCKS = {"time.time", "time.monotonic", "time.perf_counter",
+           "time.process_time", "time.time_ns", "time.perf_counter_ns"}
+_ENTROPY_PREFIXES = ("random.", "np.random.", "numpy.random.", "uuid.")
+_ENTROPY_CALLS = {"os.urandom", "datetime.now", "datetime.utcnow"}
+
+
+def _traced_functions(ctx):
+    """Innermost set of FunctionDefs that are traced (see module docstring);
+    nested defs inherit tracedness from any ancestor."""
+    fns = [n for n in ast.walk(ctx.tree)
+           if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    traced_names = set()
+    for call in walk_calls(ctx.tree):
+        if terminal(call_name(call)) in _TRACERS and call.args:
+            name = dotted(call.args[0])
+            if name:
+                traced_names.add(terminal(name))
+    traced = set()
+    for fn in fns:
+        if fn.name in traced_names \
+                or set(decorator_names(fn)) & _TRACERS:
+            traced.add(id(fn))
+    # close over nesting: a def inside a traced def is traced
+    for fn in fns:
+        if any(id(anc) in traced for anc in ctx.enclosing_functions(fn)):
+            traced.add(id(fn))
+    return traced
+
+
+def _hazard(node: ast.AST):
+    """A (line, description) when ``node`` is a nondeterminism hazard."""
+    if isinstance(node, ast.Call):
+        name = call_name(node)
+        if not name:
+            return None
+        if name in _CLOCKS or name in _ENTROPY_CALLS:
+            return node.lineno, f"{name}() call"
+        if name.startswith(_ENTROPY_PREFIXES):
+            return node.lineno, f"{name}() call"
+    if isinstance(node, ast.For):
+        it = node.iter
+        if isinstance(it, ast.Set):
+            return node.lineno, "iteration over a set literal"
+        if isinstance(it, ast.Call) and terminal(call_name(it)) == "set":
+            return node.lineno, "iteration over set(...)"
+    return None
+
+
+def check(ctx, project):
+    """Yield a finding per hazard inside a traced function."""
+    if ctx.tree is None:
+        return
+    traced = _traced_functions(ctx)
+    if not traced:
+        return
+    seen = set()
+    for fn in ast.walk(ctx.tree):
+        if id(fn) not in traced:
+            continue
+        for node in ast.walk(fn):
+            hit = _hazard(node)
+            if hit is None or id(node) in seen:
+                continue
+            seen.add(id(node))
+            line, what = hit
+            qual = ctx.qualname(node)
+            yield Finding(
+                path=ctx.rel, line=line, rule=RULE_ID,
+                message=(f"{what} inside traced function {fn.name}(): the "
+                         "value/order is baked in at trace time and varies "
+                         "per re-trace"),
+                hint=HINT, context=qual,
+            )

@@ -1,0 +1,89 @@
+"""R006 host-sync-in-span: device→host synchronization inside a phase span.
+
+The hazard: ``obs.trace.span`` measures a shard_map phase by wall-clock,
+syncing **once** on exit through its own path (``Span.set_output`` →
+``obs.trace.sync``).  A stray ``.block_until_ready()`` / ``np.asarray`` /
+``float(...)`` on a device value *inside* the span body forces an extra
+blocking round-trip mid-phase: the span stops measuring the async schedule
+(the compute/exchange overlap the ring SUMMA exists for), the watermark
+attribution shifts, and on a real TPU the dispatch pipeline drains — a
+perf bug that looks like "the phase got slower" with no code to blame.
+
+Scope: the body of every ``with span(..., kind="phase")`` block.  Flagged:
+``.block_until_ready()``, ``jax.device_get`` / ``device_get``,
+``np.asarray`` / ``np.array`` / ``jnp.asarray``-of-device-values idioms,
+and ``float(...)`` on a non-literal (the implicit-sync cast).  The
+tracer's own sync path — ``sp.set_output(...)`` and ``obs.trace.sync`` —
+is exactly the sanctioned exception and is never flagged.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..engine import Finding
+from ._ast_util import call_name, terminal, walk_calls
+
+RULE_ID = "R006"
+TITLE = "host sync inside a traced phase span"
+SUFFIXES = (".py",)
+HINT = ("move the host read outside the span (or hand the value to "
+        "sp.set_output(...), the span's own sync-on-exit path)")
+
+_SYNC_ATTRS = {"block_until_ready"}
+_SYNC_CALLS = {"device_get", "asarray", "array"}
+_SYNC_CALL_ROOTS = ("jax.", "np.", "numpy.")
+
+
+def _phase_span_withs(ctx):
+    """Every ``with span(..., kind="phase")`` node in the file."""
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, (ast.With, ast.AsyncWith)):
+            continue
+        for item in node.items:
+            call = item.context_expr
+            if not isinstance(call, ast.Call) \
+                    or terminal(call_name(call)) != "span":
+                continue
+            for kw in call.keywords:
+                if kw.arg == "kind" and isinstance(kw.value, ast.Constant) \
+                        and kw.value.value == "phase":
+                    yield node
+                    break
+
+
+def _hazard(node: ast.AST):
+    if not isinstance(node, ast.Call):
+        return None
+    name = call_name(node)
+    if isinstance(node.func, ast.Attribute) \
+            and node.func.attr in _SYNC_ATTRS:
+        return f".{node.func.attr}() forces a device sync"
+    if name and terminal(name) in _SYNC_CALLS:
+        if name in _SYNC_CALLS or name.startswith(_SYNC_CALL_ROOTS):
+            return f"{name}(...) pulls the value to host"
+    if name == "float" and node.args \
+            and not isinstance(node.args[0], ast.Constant):
+        return "float(...) implicitly syncs a device scalar"
+    return None
+
+
+def check(ctx, project):
+    """Yield a finding per host-sync call inside a phase-span body."""
+    if ctx.tree is None:
+        return
+    seen = set()
+    for w in _phase_span_withs(ctx):
+        for stmt in w.body:
+            for node in ast.walk(stmt):
+                what = _hazard(node)
+                if what is None or id(node) in seen:
+                    continue
+                seen.add(id(node))
+                qual = ctx.qualname(node)
+                yield Finding(
+                    path=ctx.rel, line=node.lineno, rule=RULE_ID,
+                    message=(f"{what} inside a kind='phase' span — the "
+                             "span stops measuring the async schedule"),
+                    hint=HINT, context=qual,
+                )

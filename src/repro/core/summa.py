@@ -171,23 +171,27 @@ def _local_spgemm_panels(
     return c.cols, c.vals, ovf
 
 
-def summa_allgather(
-    a: DistEll, b: DistEll, *, semiring: Semiring, out_block_capacity: int,
-    row_chunk: int | None = None, build_only: bool = False,
+@lru_cache(maxsize=None)
+def _allgather_program(
+    mesh: Mesh, row_axes: tuple, col_axis: str, semiring: Semiring,
+    out_block_capacity: int, n_cols_out: int, row_chunk: int | None,
 ):
-    """C = A ⊗ B (n×m · m×p). Returns (DistEll C, overflow).
+    """Build (and cache) the jitted all-gather SUMMA program for one
+    (mesh, axes, semiring, capacity, out-width, chunking) key.
 
-    Per-device comm: one all-gather of A along the grid columns
-    (words = nnz(A)·pc/P ≈ am/√P, matching Table I) and one all-gather of B
-    along the grid rows (words = nnz(B)·pr/P)."""
-    mesh = a.mesh
-    row_axes, col_axis = a.row_axes, a.col_axis
+    Same motivation as :func:`_ring_program`: the pre-split code rebuilt
+    ``jax.jit(shard_map(f))`` inside ``summa_allgather`` on every call, so
+    the fresh closure identity defeated jit's cache and every overlap
+    SpGEMM re-traced.  Shapes need not key — jit specializes per shape
+    under one cached callable."""
     spec = P(row_axes, col_axis)
-    n_cols_out = b.mat.n_cols
 
     def f(a_cols, a_vals, b_cols, b_vals):
         # Block-row panel of A: local shard already holds the device's column
         # block; gather the rest of the row (grid-column axis).
+        # repro: noqa[R003] — XLA-scheduled all-gathers: the analytic
+        # exchange_words_summa model covers them; stats are present-and-zero
+        # for the explicit-exchange counters by contract.
         ac = jax.lax.all_gather(a_cols, col_axis, axis=1, tiled=True)
         av = jax.tree.map(
             lambda v: jax.lax.all_gather(v, col_axis, axis=1, tiled=True), a_vals
@@ -209,7 +213,7 @@ def summa_allgather(
         )
         return cc, cv, jax.lax.psum(ovf, (*row_axes, col_axis))
 
-    fm = jax.jit(
+    return jax.jit(
         shard_map(
             f,
             mesh=mesh,
@@ -217,11 +221,31 @@ def summa_allgather(
             out_specs=(spec, spec, P()),
         )
     )
+
+
+def summa_allgather(
+    a: DistEll, b: DistEll, *, semiring: Semiring, out_block_capacity: int,
+    row_chunk: int | None = None, build_only: bool = False,
+):
+    """C = A ⊗ B (n×m · m×p). Returns (DistEll C, overflow).
+
+    Per-device comm: one all-gather of A along the grid columns
+    (words = nnz(A)·pc/P ≈ am/√P, matching Table I) and one all-gather of B
+    along the grid rows (words = nnz(B)·pr/P)."""
+    n_cols_out = b.mat.n_cols
+    fm = _allgather_program(
+        a.mesh, a.row_axes, a.col_axis, semiring, out_block_capacity,
+        n_cols_out, row_chunk,
+    )
     if build_only:
         return fm
     cc, cv, ovf = fm(a.mat.cols, a.mat.vals, b.mat.cols, b.mat.vals)
     cm = EllMatrix(cols=cc, vals=cv, n_cols=n_cols_out)
-    return DistEll(mat=cm, mesh=mesh, row_axes=row_axes, col_axis=col_axis), ovf
+    return (
+        DistEll(mat=cm, mesh=a.mesh, row_axes=a.row_axes,
+                col_axis=a.col_axis),
+        ovf,
+    )
 
 
 def _skew_a(mat: EllMatrix, pr: int, pc: int) -> EllMatrix:
@@ -737,16 +761,45 @@ def dist_transitive_reduction(
             r, fuzz, n_block_capacity=n_block_capacity, max_iters=max_iters
         )
         return out, iters, nnz_f
-    mesh = r.mesh
-    row_axes, col_axis = r.row_axes, r.col_axis
-    spec = P(row_axes, col_axis)
     kb = r.block_capacity
     if n_block_capacity is None:
         n_block_capacity = min(kb * kb, 4 * kb)
     n_total = r.mat.n_cols
+    fm = _tr_program(
+        r.mesh, r.row_axes, r.col_axis, n_total, n_block_capacity,
+        float(fuzz), max_iters, fused, row_chunk,
+    )
+    if build_only:
+        return fm
+    cols, vals, iters, nnz_f = fm(r.mat.cols, r.mat.vals)
+    out = DistEll(
+        mat=EllMatrix(cols=cols, vals=vals, n_cols=n_total),
+        mesh=r.mesh,
+        row_axes=r.row_axes,
+        col_axis=r.col_axis,
+    )
+    return out, iters, nnz_f
+
+
+@lru_cache(maxsize=None)
+def _tr_program(
+    mesh: Mesh, row_axes: tuple, col_axis: str, n_total: int,
+    n_block_capacity: int, fuzz: float, max_iters: int, fused: bool,
+    row_chunk: int | None,
+):
+    """Build (and cache) the jitted all-gather transitive-reduction program
+    (the full ``while_loop`` fixed-point of Algorithm 2) for one
+    (mesh, axes, capacity, fuzz, iteration-policy) key.
+
+    Pre-split, ``dist_transitive_reduction`` rebuilt ``jax.jit(shard_map)``
+    per call — every TR invocation in the cell pipeline re-traced the whole
+    fixed-point loop (the R001/PR 7 hazard class)."""
+    spec = P(row_axes, col_axis)
 
     def f(r_cols, r_vals):
         def nnz_of(cols):
+            # repro: noqa[R003] — scalar nnz tally for the fixed-point
+            # test, not a data exchange; excluded from the words model.
             return jax.lax.psum(
                 jnp.sum(cols >= 0).astype(jnp.int32), (*row_axes, col_axis)
             )
@@ -754,6 +807,9 @@ def dist_transitive_reduction(
         def body(carry):
             r_cols, r_vals, prev, cur, it = carry
             # --- N = R² (lines 3-4): allgather panels, local multiply ---
+            # repro: noqa[R003] — XLA-scheduled all-gather variant:
+            # unaccounted by design (summa='ring' is the measured path);
+            # exchange stats stay present-and-zero per the schema contract.
             ac = jax.lax.all_gather(r_cols, col_axis, axis=1, tiled=True)
             av = jax.lax.all_gather(r_vals, col_axis, axis=1, tiled=True)
             bc, bv = r_cols, r_vals
@@ -803,22 +859,58 @@ def dist_transitive_reduction(
         r_cols, r_vals, _, nnz_f, iters = jax.lax.while_loop(cond, body, init)
         return r_cols, r_vals, iters, nnz_f
 
-    fm = jax.jit(
+    return jax.jit(
         shard_map(
             f, mesh=mesh, in_specs=(spec, spec),
             out_specs=(spec, spec, P(), P()),
         )
     )
-    if build_only:
-        return fm
-    cols, vals, iters, nnz_f = fm(r.mat.cols, r.mat.vals)
-    out = DistEll(
-        mat=EllMatrix(cols=cols, vals=vals, n_cols=n_total),
-        mesh=mesh,
-        row_axes=row_axes,
-        col_axis=col_axis,
+
+
+@lru_cache(maxsize=None)
+def _tr_prune_program(
+    mesh: Mesh, row_axes: tuple, col_axis: str, n_total: int, fuzz: float,
+):
+    """Build (and cache) the jitted prune step of the ring transitive
+    reduction (lines 5-9 of Algorithm 2, local per §V-D).
+
+    The host-side pass loop of :func:`dist_transitive_reduction_ring` calls
+    this program once per pass; pre-split it rebuilt ``jax.jit(shard_map)``
+    every pass, so each TR pass paid a full re-trace on top of the ring."""
+    spec = P(row_axes, col_axis)
+
+    def prune_step(r_cols, r_vals, n_cols_blk, n_vals_blk):
+        n_loc = EllMatrix(cols=n_cols_blk, vals=n_vals_blk, n_cols=n_total)
+        got, found = n_loc.lookup(MPSR, r_cols)
+        vals_m = jnp.where(jnp.isfinite(r_vals), r_vals, -INF)
+        vals_m = jnp.where((r_cols >= 0)[:, :, None], vals_m, -INF)
+        local_max = jnp.max(vals_m, axis=(1, 2))
+        # repro: noqa[R003] — scalar row-max pmax + nnz psum: convergence
+        # bookkeeping of the §V-D local prune, not a data exchange; the
+        # ring program accounts every word that actually rotates.
+        row_max = jax.lax.pmax(local_max, col_axis) + fuzz
+        trans = (
+            (got <= row_max[:, None, None])
+            & jnp.isfinite(got)
+            & found[:, :, None]
+            & jnp.isfinite(r_vals)
+        )
+        new_vals = jnp.where(trans, INF, r_vals)
+        dead = ~jnp.any(jnp.isfinite(new_vals), axis=-1) & (r_cols >= 0)
+        pruned = prune(
+            EllMatrix(cols=r_cols, vals=new_vals, n_cols=n_total), dead, MPSR
+        )
+        nnz = jax.lax.psum(
+            jnp.sum(pruned.cols >= 0).astype(jnp.int32), (*row_axes, col_axis)
+        )
+        return pruned.cols, pruned.vals, nnz
+
+    return jax.jit(
+        shard_map(
+            prune_step, mesh=mesh, in_specs=(spec, spec, spec, spec),
+            out_specs=(spec, spec, P()),
+        )
     )
-    return out, iters, nnz_f
 
 
 def dist_transitive_reduction_ring(
@@ -844,41 +936,11 @@ def dist_transitive_reduction_ring(
     when the grid routes to the all-gather fallback)."""
     mesh = r.mesh
     row_axes, col_axis = r.row_axes, r.col_axis
-    spec = P(row_axes, col_axis)
     kb = r.block_capacity
     if n_block_capacity is None:
         n_block_capacity = min(kb * kb, 4 * kb)
     n_total = r.mat.n_cols
-
-    def prune_step(r_cols, r_vals, n_cols_blk, n_vals_blk):
-        n_loc = EllMatrix(cols=n_cols_blk, vals=n_vals_blk, n_cols=n_total)
-        got, found = n_loc.lookup(MPSR, r_cols)
-        vals_m = jnp.where(jnp.isfinite(r_vals), r_vals, -INF)
-        vals_m = jnp.where((r_cols >= 0)[:, :, None], vals_m, -INF)
-        local_max = jnp.max(vals_m, axis=(1, 2))
-        row_max = jax.lax.pmax(local_max, col_axis) + fuzz
-        trans = (
-            (got <= row_max[:, None, None])
-            & jnp.isfinite(got)
-            & found[:, :, None]
-            & jnp.isfinite(r_vals)
-        )
-        new_vals = jnp.where(trans, INF, r_vals)
-        dead = ~jnp.any(jnp.isfinite(new_vals), axis=-1) & (r_cols >= 0)
-        pruned = prune(
-            EllMatrix(cols=r_cols, vals=new_vals, n_cols=n_total), dead, MPSR
-        )
-        nnz = jax.lax.psum(
-            jnp.sum(pruned.cols >= 0).astype(jnp.int32), (*row_axes, col_axis)
-        )
-        return pruned.cols, pruned.vals, nnz
-
-    pf = jax.jit(
-        shard_map(
-            prune_step, mesh=mesh, in_specs=(spec, spec, spec, spec),
-            out_specs=(spec, spec, P()),
-        )
-    )
+    pf = _tr_prune_program(mesh, row_axes, col_axis, n_total, float(fuzz))
 
     cur = r
     nnz_cur = int(jnp.sum(r.mat.cols >= 0))

@@ -654,6 +654,8 @@ def chunked_ce_loss(x, labels, w_unembed, cfg: ModelConfig, *, mesh=None):
         # check_vma=False: lse/gold are psummed over "model" so loss is
         # provably model-invariant, but the vma tracker marks the all-gathered
         # max as varying and can't see the invariance.
+        # repro: noqa[R001] — built at trace time of the jitted train step
+        # (assigned and consumed inside one trace), not per eager call.
         ce_sm = shard_map(
             ce_local,
             mesh=mesh,

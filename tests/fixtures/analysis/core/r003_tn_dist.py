@@ -1,0 +1,27 @@
+"""R003 true negatives: both sanctioned accounting conventions.
+
+The trace-time ``acct`` increment next to the collective (the
+``summa._ring_program`` convention) and the analytic
+``exchange_words_*`` model call in the enclosing scope (the
+``components_dist`` convention).  No findings expected.
+"""
+
+import jax
+
+
+def exchange_words_fixture(n, p):
+    """Analytic model helper: words per device for the fixture schedule."""
+    return n * (p - 1) // p
+
+
+def rotate_counted(x, axis, perm, acct, words):
+    """The acct-dict convention: count next to the ppermute."""
+    acct["words"] += words
+    acct["rounds"] += 1
+    return jax.lax.ppermute(x, axis, perm)
+
+
+def gather_modeled(x, axis, perm, n, p, stats):
+    """The analytic convention: the model call covers the schedule."""
+    stats["exchange_words_fixture"] = exchange_words_fixture(n, p)
+    return jax.lax.ppermute(x, axis, perm)

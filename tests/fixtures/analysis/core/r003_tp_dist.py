@@ -1,0 +1,14 @@
+"""R003 true positive: a collective with no exchange accounting.
+
+A ``lax.ppermute`` in an explicit-exchange module (``core/*_dist.py``
+scope) whose enclosing function chain neither increments an ``acct``
+accumulator nor calls an analytic ``exchange_words_*`` model.  One
+finding expected, anchored at the ppermute.
+"""
+
+import jax
+
+
+def rotate_unaccounted(x, axis, perm):
+    """Move a panel without telling the comm model."""
+    return jax.lax.ppermute(x, axis, perm)

@@ -1,0 +1,26 @@
+"""D001 true negative: fully documented public surface.
+
+Private names and nested defs are out of scope.  No findings expected.
+"""
+
+
+class Widget:
+    """A documented class."""
+
+    def resize(self, n):
+        """A documented method."""
+        return n
+
+    def _internal(self):
+        return None
+
+
+def frob(x):
+    """A documented function with an undocumented nested def."""
+    def helper(y):
+        return y
+    return helper(x)
+
+
+def _private(x):
+    return x

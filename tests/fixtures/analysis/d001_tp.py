@@ -1,0 +1,7 @@
+class Widget:
+    def resize(self, n):
+        return n
+
+
+def frob(x):
+    return x

@@ -1,0 +1,28 @@
+"""R002 true negatives: the sanctioned constant patterns.
+
+A plain Python literal inside a kernel (the ``kernels/cc/cc.py``
+``_BIG = 2**30`` fix), and a module-level ``jnp`` constant used only
+*outside* kernel bodies (host-side oracles may hold device values).
+No findings expected.
+"""
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BIG = 2**30  # plain python int: safe to capture
+_HOST_ONLY = jnp.int32(-1)
+
+
+def clamp_kernel(x_ref, o_ref):
+    """Kernel body using only the plain-literal constant."""
+    o_ref[...] = jnp.minimum(x_ref[...], _BIG)
+
+
+def run(x):
+    """Launch the kernel."""
+    return pl.pallas_call(clamp_kernel, out_shape=x)(x)
+
+
+def host_reference(x):
+    """Host-side oracle: free to use the device constant."""
+    return jnp.where(x == _HOST_ONLY, 0, x)

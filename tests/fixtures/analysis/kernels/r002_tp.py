@@ -1,0 +1,21 @@
+"""R002 true positive: the PR 6 pallas_call captured-constant bug, minimized.
+
+``NO_COL`` is a module-level ``jnp`` scalar — a concrete device array —
+captured inside a Pallas kernel body.  One finding expected on the load
+inside ``merge_kernel``.
+"""
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NO_COL = jnp.int32(-1)
+
+
+def merge_kernel(x_ref, o_ref):
+    """Kernel body capturing the module-level device constant."""
+    o_ref[...] = jnp.where(x_ref[...] == NO_COL, 0, x_ref[...])
+
+
+def run(x):
+    """Launch the kernel."""
+    return pl.pallas_call(merge_kernel, out_shape=x)(x)

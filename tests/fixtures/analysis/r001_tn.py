@@ -1,0 +1,38 @@
+"""R001 true negatives: every sanctioned way to build a jitted program.
+
+Module-level construction, an ``@lru_cache`` program builder (the
+``_ring_program`` pattern), a ``make_*``-prefixed one-shot builder, AOT
+``.lower()``, and a ``shard_map`` consumed at trace time of an enclosing
+jitted step.  No findings expected.
+"""
+
+from functools import lru_cache
+
+import jax
+from jax.experimental.shard_map import shard_map
+
+module_level = jax.jit(lambda x: x + 1)
+
+
+@lru_cache(maxsize=None)
+def _cached_program(mesh, spec, f):
+    """The _ring_program pattern: one build per (mesh, spec, f) key."""
+    return jax.jit(
+        shard_map(f, mesh=mesh, in_specs=(spec,), out_specs=spec)
+    )
+
+
+def make_step(f):
+    """One-shot builder by naming convention: the caller caches."""
+    return jax.jit(f, donate_argnums=(0,))
+
+
+def dry_run_cost(f, x):
+    """AOT lowering pays compilation deliberately."""
+    return jax.jit(f).lower(x).compile().cost_analysis()
+
+
+def fused_phase(mesh, spec, f, x):
+    """shard_map invoked in the same expression: traced into the
+    enclosing jitted program, no per-call cache identity."""
+    return shard_map(f, mesh=mesh, in_specs=(spec,), out_specs=spec)(x)

@@ -1,0 +1,18 @@
+"""R001 true positive: the PR 7 summa_ring retrace bug, minimized.
+
+``jax.jit(shard_map(f))`` is rebuilt on every call, so the fresh closure
+identity defeats jit's cache and each call re-traces the whole ring.
+Exactly one finding is expected: the composite is reported once, at the
+outer ``jit`` call.
+"""
+
+import jax
+from jax.experimental.shard_map import shard_map
+
+
+def summa_ring_buggy(mesh, spec, f, a, b):
+    """Multiply one panel pair — rebuilding the program per call."""
+    fm = jax.jit(
+        shard_map(f, mesh=mesh, in_specs=(spec, spec), out_specs=spec)
+    )
+    return fm(a, b)

@@ -1,0 +1,14 @@
+"""R004 true negatives: registered keys and declared groups only.
+
+``exchange_words_summa`` and the ``summa_exchange`` group are declared in
+``obs/schema.py``; dynamic (non-literal) keys are out of static scope by
+design.  No findings expected.
+"""
+
+
+def report(metrics, n, dynamic_key):
+    """Emit only registered names."""
+    metrics.emit("exchange_words_summa", n)
+    metrics.emit_many({"exchange_rounds_summa": 1})
+    metrics.seed_zero("summa_exchange")
+    metrics.emit(dynamic_key, n)  # dynamic: validated at run time instead

@@ -1,0 +1,13 @@
+"""R004 true positive: emitting stats keys the schema never declared.
+
+An ``emit`` with a typo'd key, an ``emit_many`` dict with an unregistered
+key, and a ``seed_zero`` naming an undeclared present-and-zero group.
+Three findings expected.
+"""
+
+
+def report(metrics, n):
+    """Emit under names obs/schema.py does not know."""
+    metrics.emit("exchnage_words_summa", n)  # typo'd key
+    metrics.emit_many({"totally_unregistered_key": n})
+    metrics.seed_zero("not_a_zero_group")

@@ -1,0 +1,26 @@
+"""R005 true negatives: entropy outside traces, ordered iteration inside.
+
+Clock calls in plain host functions are fine (benchmark timers live
+there), and a traced function may iterate a *sorted* set.  No findings
+expected.
+"""
+
+import time
+
+import jax
+
+
+def timed(f):
+    """Host-side timing helper: clocks are fine outside a trace."""
+    t0 = time.perf_counter()
+    out = f()
+    return out, time.perf_counter() - t0
+
+
+@jax.jit
+def ordered_step(x):
+    """Deterministic iteration: sorted() fixes the trace order."""
+    total = x
+    for axis in sorted({"rows", "cols"}):
+        total = jax.lax.psum(total, axis)
+    return total

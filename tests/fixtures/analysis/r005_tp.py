@@ -1,0 +1,32 @@
+"""R005 true positives: host entropy baked into a traced program.
+
+A clock call and a set iteration inside functions that are traced
+(``@jax.jit`` decoration; passed by name to ``shard_map``).  Three
+findings expected: the clock, the random draw, and the set-literal loop.
+"""
+
+import random
+import time
+
+import jax
+
+
+@jax.jit
+def stamped_step(x):
+    """Bakes one arbitrary host timestamp into the compiled program."""
+    started = time.time()
+    jitter = random.random()
+    return x + started + jitter
+
+
+def build(mesh, spec):
+    """Hands ``f`` to shard_map: its body runs at trace time."""
+
+    def f(x):
+        total = x
+        for axis in {"rows", "cols"}:  # trace order varies per hash seed
+            total = jax.lax.psum(total, axis)
+        return total
+
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=(spec,), out_specs=spec)

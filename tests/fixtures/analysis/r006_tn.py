@@ -1,0 +1,26 @@
+"""R006 true negatives: the sanctioned span usage.
+
+``sp.set_output(...)`` is the span's own sync-on-exit path; host reads
+belong after the block; non-phase spans (kind="op") have no async
+schedule to protect.  No findings expected.
+"""
+
+import numpy as np
+
+from repro.obs.trace import span
+
+
+def ring_phase(run, out):
+    """Phase body that defers every host read to the span exit."""
+    with span("SpGEMM", kind="phase", phase="ring_stage") as sp:
+        out = run(out)
+        sp.set_output(out)
+    return np.asarray(out)
+
+
+def kernel_launch(run, x):
+    """op spans measure a synchronous launch: host reads are fine."""
+    with span("spgemm", kind="op"):
+        y = run(x)
+        y.block_until_ready()
+    return y

@@ -1,0 +1,21 @@
+"""R006 true positives: device→host syncs inside a phase span.
+
+``.block_until_ready()``, ``np.asarray`` and ``float(...)`` force extra
+blocking round-trips mid-phase, so the span stops measuring the async
+schedule.  Three findings expected.
+"""
+
+import numpy as np
+
+from repro.obs.trace import span
+
+
+def ring_phase(run, out, tally):
+    """Phase body that drains the dispatch pipeline three ways."""
+    with span("SpGEMM", kind="phase", phase="ring_stage") as sp:
+        out = run(out)
+        out.block_until_ready()
+        host = np.asarray(out)
+        tally += float(out[0])
+        sp.set_output(host)
+    return tally
